@@ -1,0 +1,64 @@
+"""Shared benchmark helpers: timing, tiny-config factory, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, TrainConfig
+from repro.data import DataIterator, make_markov_lm
+from repro.models import build_model
+from repro.train import init_train_state, make_train_step
+
+
+def tiny_config(attention: str, *, n_layers=2, d_model=128, heads=4,
+                vocab=256, degree=4, r=16, learned=True, local=True,
+                blk=64, extra_layer_for_kernel=True) -> ArchConfig:
+    """Paper Section 4: kernel-based variants get +1 layer."""
+    if attention == "polysketch" and extra_layer_for_kernel:
+        n_layers += 1
+    return ArchConfig(
+        name=f"bench-{attention}", family="dense", n_layers=n_layers,
+        d_model=d_model, n_heads=heads, n_kv_heads=heads, d_ff=4 * d_model,
+        vocab_size=vocab, attention=attention, poly_degree=degree,
+        sketch_size=r, learned_sketch=learned, local_exact=local,
+        lt_block_size=blk, norm="layernorm")
+
+
+def time_fn(fn, *args, iters=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def train_steps(cfg, *, steps, batch, seq, lr=3e-3, seed=0, sample_fn=None,
+                time_it=False):
+    """Returns (losses, seconds_per_step)."""
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    state = init_train_state(params)
+    tcfg = TrainConfig(seq_len=seq, global_batch=batch, steps=steps,
+                       peak_lr=lr)
+    step = jax.jit(make_train_step(model, cfg, tcfg))
+    it = DataIterator(sample_fn or make_markov_lm(cfg.vocab_size, seed=7),
+                      batch, seq, seed=seed)
+    b0 = next(it)
+    state, m = step(state, b0)  # compile
+    jax.block_until_ready(m["loss"])
+    losses = [float(m["loss"])]
+    t0 = time.perf_counter()
+    for _ in range(steps - 1):
+        state, m = step(state, next(it))
+        losses.append(float(m["loss"]))
+    jax.block_until_ready(m["loss"])
+    sps = (time.perf_counter() - t0) / max(steps - 1, 1)
+    return state, losses, sps
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,40 @@
+"""Paper Appendix F.2: induction heads synthetic task."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, tiny_config, train_steps
+from repro.data import induction_heads
+from repro.models import build_model
+
+
+def accuracy(model, cfg, params, *, seq, n_examples=128):
+    toks, mask = induction_heads(n_examples, seq, step=10_000, vocab=16,
+                                 seed=3)
+    logits, _, _ = model.apply(params, {"tokens": jnp.asarray(toks[:, :-1])})
+    pred = np.array(jnp.argmax(logits[:, -1], -1))
+    return float((pred == toks[:, -1]).mean())
+
+
+def main(fast: bool = True):
+    seq = 64 if fast else 128
+    steps = 80 if fast else 400
+    for mech in ("softmax", "polynomial", "polysketch"):
+        cfg = tiny_config(mech, n_layers=2, d_model=128, vocab=17, r=16,
+                          blk=32, extra_layer_for_kernel=False)
+
+        def sample(batch, s, step):
+            return induction_heads(batch, s, step, vocab=16, seed=3)
+
+        model = build_model(cfg)
+        state, losses, sps = train_steps(cfg, steps=steps, batch=32, seq=seq,
+                                         sample_fn=sample, lr=3e-3)
+        acc = accuracy(model, cfg, state.params, seq=seq)
+        emit(f"induction_heads/{mech}/ctx{seq}", sps * 1e6,
+             f"acc={acc:.3f};loss={losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

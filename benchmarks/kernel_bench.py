@@ -1,0 +1,46 @@
+"""Kernel-level scaling: the paper's S3.1 blocked lt-mult vs naive
+quadratic materialization, and causal polysketch vs exact polynomial
+attention, at growing context. Wall-clock on CPU via the XLA paths (the
+Pallas kernels target TPU; interpret mode is not a timing proxy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def main(fast: bool = True):
+    m, k = 32, 64
+    for n in (512, 1024, 2048) if fast else (1024, 4096, 8192, 16384):
+        ks = jax.random.split(jax.random.PRNGKey(n), 3)
+        a = jax.random.normal(ks[0], (4, n, m))
+        b = jax.random.normal(ks[1], (4, n, m))
+        c = jax.random.normal(ks[2], (4, n, k))
+        blocked = jax.jit(lambda a, b, c: ops.lt_mult(a, b, c, block_size=256,
+                                                      impl="xla"))
+        naive = jax.jit(ref.lt_mult_ref)
+        tb = time_fn(blocked, a, b, c)
+        tn = time_fn(naive, a, b, c)
+        emit(f"lt_mult/blocked/n{n}", tb * 1e6, f"naive_us={tn * 1e6:.0f};"
+             f"speedup={tn / tb:.2f}x")
+
+    hd, r = 64, 16
+    for n in (512, 1024, 2048) if fast else (1024, 4096, 16384):
+        ks = jax.random.split(jax.random.PRNGKey(n), 5)
+        qm = jax.random.normal(ks[0], (1, 4, n, r))
+        km = jax.random.normal(ks[1], (1, 4, n, r))
+        q, kk_, v = (jax.random.normal(x, (1, 4, n, hd)) for x in ks[2:])
+        lin = jax.jit(lambda *xs: ops.polysketch_attention(
+            *xs, degree=4, scale=1 / hd, block_size=256, impl="xla"))
+        quad = jax.jit(lambda q, k, v: ops.poly_attention(
+            q, k, v, degree=4, scale=1 / hd, impl="xla"))
+        tl = time_fn(lin, qm, km, q, kk_, v)
+        tq = time_fn(quad, q, kk_, v)
+        emit(f"attention/polysketch_vs_quadratic/n{n}", tl * 1e6,
+             f"quadratic_us={tq * 1e6:.0f};speedup={tq / tl:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

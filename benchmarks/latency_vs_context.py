@@ -1,0 +1,33 @@
+"""Paper Figure 1 / Table 4 analogue: train-step latency vs context length
+at FIXED tokens-per-batch. Softmax/polynomial are quadratic in ctx;
+polysketch stays ~flat (linear). CPU wall-clock at reduced scale; the shape
+of the curve, not the absolute numbers, is the claim being reproduced."""
+from __future__ import annotations
+
+from benchmarks.common import emit, tiny_config, train_steps
+
+
+def main(fast: bool = True):
+    tokens = 4096 if fast else 16384
+    ctxs = [128, 256, 512, 1024] if fast else [256, 512, 1024, 2048, 4096]
+    mechs = [("softmax", {}), ("polynomial", {}),
+             ("polysketch", dict(learned=True, local=True))]
+    rows = {}
+    for mech, kw in mechs:
+        for ctx in ctxs:
+            batch = max(1, tokens // ctx)
+            cfg = tiny_config(mech, blk=min(256, ctx), **kw)
+            _, losses, sps = train_steps(cfg, steps=4, batch=batch, seq=ctx)
+            us_tok = sps / (batch * ctx) * 1e6
+            rows[(mech, ctx)] = us_tok
+            emit(f"latency/{mech}/ctx{ctx}", sps * 1e6,
+                 f"us_per_token={us_tok:.2f};loss={losses[-1]:.3f}")
+    # derived: scaling exponent ctx_max/ctx_min per mech (1.0 = linear-flat)
+    for mech, _ in mechs:
+        lo, hi = rows[(mech, ctxs[0])], rows[(mech, ctxs[-1])]
+        emit(f"latency/{mech}/us_tok_growth", 0.0,
+             f"x{hi / lo:.2f} from ctx{ctxs[0]} to ctx{ctxs[-1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "sketch_error",        # Theorem 1.1
+    "kernel_bench",        # S3.1 lt-mult + linear-vs-quadratic attention
+    "latency_vs_context",  # Figure 1 / Table 4
+    "quality_proxy",       # Figure 2 / Tables 2-3
+    "selective_copying",   # Table 5 / Appendix F.1
+    "induction_heads",     # Appendix F.2
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow on CPU)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        try:
+            mod.main(fast=not args.full)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Paper Appendix F.2: induction heads task (in-context learning).
+
+  PYTHONPATH=src python examples/induction_heads.py
+"""
+import sys
+sys.path.insert(0, ".")
+from benchmarks.induction_heads import main
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main(fast=True)

@@ -1,0 +1,11 @@
+"""Paper Appendix F.1: selective copying task (content-aware memorization).
+
+  PYTHONPATH=src python examples/selective_copying.py
+"""
+import sys
+sys.path.insert(0, ".")
+from benchmarks.selective_copying import main
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main(fast=True)

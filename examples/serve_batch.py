@@ -1,0 +1,10 @@
+"""Batched serving demo: the polysketch decode state is O(1) in context
+length, so slot admission is independent of prompt length.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "gpt2s-polysketch", "--smoke", "--requests", "6",
+          "--slots", "3", "--prompt-len", "48", "--gen", "16"])

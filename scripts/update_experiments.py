@@ -1,0 +1,65 @@
+"""Refresh the generated tables inside EXPERIMENTS.md from
+experiments/dryrun.json and bench_output.txt.
+
+  PYTHONPATH=src python scripts/update_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.roofline import render  # noqa: E402
+
+
+def replace_block(text: str, marker: str, payload: str) -> str:
+    pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.S)
+    block = f"<!-- {marker} -->\n\n{payload}\n"
+    if pat.search(text):
+        return pat.sub(block, text)
+    return text
+
+
+def main():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    exp = os.path.join(root, "EXPERIMENTS.md")
+    with open(exp) as f:
+        text = f.read()
+
+    dj = os.path.join(root, "experiments", "dryrun.json")
+    if os.path.exists(dj):
+        with open(dj) as f:
+            results = json.load(f)
+        base = {k: v for k, v in results.items() if "#" not in k and "|single" in k.replace("|16x16", "|single")}
+        # split baseline vs tagged (hillclimb) rows
+        baseline = {k: v for k, v in results.items() if "#" not in k}
+        n_ok = sum(1 for r in baseline.values() if r.get("ok"))
+        n_multi = sum(1 for k, r in baseline.items()
+                      if r.get("ok") and r.get("mesh") == "2x16x16")
+        payload = (f"Baseline cells compiled OK: {n_ok}/{len(baseline)} "
+                   f"(multi-pod proofs: {n_multi}).\n\n"
+                   + render({k: v for k, v in baseline.items()
+                             if v.get("mesh") == "16x16"}))
+        text = replace_block(text, "ROOFLINE_TABLE", payload)
+
+    bench = os.path.join(root, "bench_output.txt")
+    if os.path.exists(bench):
+        with open(bench) as f:
+            lines = [ln.strip() for ln in f if "," in ln]
+        rows = ["| name | us/call | derived |", "|---|---|---|"]
+        for ln in lines[1:]:
+            parts = ln.split(",", 2)
+            if len(parts) == 3:
+                rows.append(f"| {parts[0]} | {parts[1]} | {parts[2]} |")
+        text = replace_block(text, "BENCH_TABLE", "\n".join(rows))
+
+    with open(exp, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

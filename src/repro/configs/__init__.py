@@ -1,0 +1,35 @@
+"""Config registry: --arch <id> resolves here."""
+from repro.configs.base import ArchConfig, ShapeConfig, TrainConfig, SHAPES, LM_SHAPES
+
+_MODULES = {
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "dbrx-132b": "dbrx_132b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "qwen3-14b": "qwen3_14b",
+    "yi-34b": "yi_34b",
+    "starcoder2-3b": "starcoder2_3b",
+    "deepseek-7b": "deepseek_7b",
+    "mamba2-780m": "mamba2_780m",
+    "whisper-large-v3": "whisper_large_v3",
+    "gpt2s-polysketch": "gpt2_paper",
+}
+
+ARCH_NAMES = [n for n in _MODULES if n != "gpt2s-polysketch"]
+
+
+def _module(name):
+    import importlib
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str, smoke: bool = False, **overrides) -> ArchConfig:
+    mod = _module(name)
+    cfg = mod.SMOKE if smoke else mod.CONFIG
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+__all__ = ["ArchConfig", "ShapeConfig", "TrainConfig", "SHAPES", "LM_SHAPES",
+           "ARCH_NAMES", "get_config"]

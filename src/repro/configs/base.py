@@ -1,0 +1,139 @@
+"""Architecture + shape configuration dataclasses.
+
+Every assigned architecture is a module in this package exporting CONFIG
+(the full published config) and SMOKE (a reduced same-family config for CPU
+tests). Shapes are the assigned (seq_len, global_batch, kind) cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # block structure: cycle of mixer kinds over layers
+    block_pattern: tuple[str, ...] = ("attn",)   # attn|local_attn|rglru|ssd
+
+    # attention mechanism for "attn" mixers (the paper's knob)
+    attention: str = "polysketch"  # softmax|polynomial|polysketch
+    poly_degree: int = 4
+    sketch_size: int = 32
+    learned_sketch: bool = True
+    local_exact: bool = True
+    lt_block_size: int = 256
+    qk_norm: bool = False          # per-head RMS q/k-norm (qwen3 recipe)
+    sliding_window: int = 2048     # for local_attn mixers
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+
+    # ffn
+    ffn: str = "glu"               # glu|moe
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_period: int = 1            # MoE every k-th layer (llama4: 2)
+    capacity_factor: float = 1.25
+    moe_dispatch_groups: int = 1   # DP-shard-aligned dispatch groups (EP)
+
+    # ssm (mamba2)
+    ssm_state: int = 128
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+
+    # rglru (recurrentgemma)
+    rglru_width: int = 0           # 0 -> d_model
+    rglru_c: float = 8.0
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_len: int = 1500
+    cross_attention: bool = False
+
+    # vlm
+    n_image_tokens: int = 0
+
+    # numerics / training
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: str = "none"            # none|dots|full
+    unroll_layers: bool = False    # Python-loop layers instead of lax.scan (cost probes)
+    tie_embeddings: bool = True
+    norm: str = "rmsnorm"          # rmsnorm|layernorm
+
+    # router aux loss weights (MoE)
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 0.001
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def attn_scale(self) -> float:
+        """Scale applied inside the polynomial: (<q,k> * scale)^p."""
+        return 1.0 / self.resolved_head_dim
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def pattern_layers(self) -> int:
+        """Layers per pattern group."""
+        return len(self.block_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.pattern_layers == 0, \
+            (self.name, self.n_layers, self.block_pattern)
+        return self.n_layers // self.pattern_layers
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train|prefill|decode
+
+
+LM_SHAPES = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES = {s.name: s for s in LM_SHAPES}
+
+
+@dataclass
+class TrainConfig:
+    """Training-run hyperparameters (paper Section 4 recipe defaults)."""
+    seq_len: int = 512
+    global_batch: int = 8
+    steps: int = 100
+    warmup_frac: float = 0.1
+    peak_lr: float = 7e-4
+    b1: float = 0.95
+    b2: float = 0.98
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    microbatches: int = 1
+    seed: int = 0
+    checkpoint_every: int = 0      # 0 = disabled
+    checkpoint_dir: str = ""
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    zero_grad_sync: bool = False   # reduce-scatter gradient sync (shard_map)
+    grad_compression: str = "none" # none|int8

@@ -1,0 +1,220 @@
+"""Decode-time attention states.
+
+The headline inference property of PolySketchFormer: the decode state is
+O(1) in context length (an r^2 x (h+1) prefix matrix per kv-head plus one
+partial block buffer), vs an O(n) KV cache for softmax attention.
+
+The polysketch decode step is *bit-equivalent in semantics* to the training
+block algorithm (linear_attention.block_causal_linear_attention): a token
+attends exactly (degree-p polynomial weights) to tokens in its own block so
+far, and through the sketched prefix state to all earlier, completed blocks.
+When the buffer fills, the whole block is folded into the prefix state.
+
+All caches here are per-layer pytrees; the model stacks them over layers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import self_kron
+
+
+class PolysketchCache(NamedTuple):
+    z: jax.Array      # (B, Hkv, r^2, h+1) f32 prefix state over folded blocks
+    kbuf: jax.Array   # (B, Hkv, b, h)     raw keys, current partial block
+    vbuf: jax.Array   # (B, Hkv, b, h)
+    mbuf: jax.Array   # (B, Hkv, b, r)     sketched keys, current partial block
+    pos: jax.Array    # ()                 int32 tokens consumed so far
+
+
+def init_polysketch_cache(batch, n_kv_heads, head_dim, r, block_size,
+                          dtype=jnp.float32) -> PolysketchCache:
+    b = block_size
+    return PolysketchCache(
+        z=jnp.zeros((batch, n_kv_heads, r * r, head_dim + 1), jnp.float32),
+        kbuf=jnp.zeros((batch, n_kv_heads, b, head_dim), dtype),
+        vbuf=jnp.zeros((batch, n_kv_heads, b, head_dim), dtype),
+        mbuf=jnp.zeros((batch, n_kv_heads, b, r), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def polysketch_decode_step(cache: PolysketchCache, qm, km, q, k, v, *,
+                           degree: int, scale: float,
+                           local_exact: bool = True):
+    """One decode step.
+
+    qm: (B, Hq, r)  sketched query (input pre-scaled by sqrt(scale))
+    km: (B, Hkv, r) sketched key
+    q:  (B, Hq, h)  post-LN query;  k, v: (B, Hkv, h)
+    Returns (out (B, Hq, h), new_cache).
+    """
+    bsz, hq, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    blk = cache.kbuf.shape[2]
+    fill = jnp.mod(cache.pos, blk)  # slot for the incoming token
+
+    f32 = jnp.float32
+    kbuf = jax.lax.dynamic_update_index_in_dim(cache.kbuf, k.astype(cache.kbuf.dtype), fill, axis=2)
+    vbuf = jax.lax.dynamic_update_index_in_dim(cache.vbuf, v.astype(cache.vbuf.dtype), fill, axis=2)
+    mbuf = jax.lax.dynamic_update_index_in_dim(cache.mbuf, km.astype(f32), fill, axis=2)
+
+    # --- local (within current partial block) attention weights ---
+    qg = q.reshape(bsz, hkv, g, hd).astype(f32)
+    qmg = qm.reshape(bsz, hkv, g, -1).astype(f32)
+    if local_exact:
+        w = (jnp.einsum("bngh,bnsh->bngs", qg, kbuf.astype(f32)) * scale) ** degree
+    else:
+        w = jnp.einsum("bngr,bnsr->bngs", qmg, mbuf) ** 2
+    valid = (jnp.arange(blk) <= fill)[None, None, None, :]
+    w = jnp.where(valid, w, 0.0)
+    ones = jnp.ones((*vbuf.shape[:-1], 1), f32)
+    vv = jnp.concatenate([vbuf.astype(f32), ones], axis=-1)   # (B,Hkv,blk,h+1)
+    local = jnp.einsum("bngs,bnsd->bngd", w, vv)
+
+    # --- sketched prefix (folded blocks) ---
+    qf = self_kron(qmg)                                        # (B,Hkv,g,r^2)
+    cross = jnp.einsum("bngf,bnfd->bngd", qf, cache.z)
+
+    acc = local + cross
+    out = (acc[..., :hd] / (1.0 + acc[..., hd:])).reshape(bsz, hq, hd)
+
+    # --- fold the block into the prefix state when it completes ---
+    def fold(z):
+        kf = self_kron(mbuf)                                   # (B,Hkv,blk,r^2)
+        return z + jnp.einsum("bnsf,bnsd->bnfd", kf, vv)
+
+    z = jax.lax.cond(fill == blk - 1, fold, lambda z: z, cache.z)
+    new_cache = PolysketchCache(z=z, kbuf=kbuf, vbuf=vbuf, mbuf=mbuf,
+                                pos=cache.pos + 1)
+    return out.astype(v.dtype), new_cache
+
+
+class KVCache(NamedTuple):
+    k: jax.Array    # (B, Hkv, S_max, h)
+    v: jax.Array    # (B, Hkv, S_max, h)
+    pos: jax.Array  # ()
+
+
+def init_kv_cache(batch, n_kv_heads, head_dim, max_len, dtype=jnp.float32) -> KVCache:
+    shape = (batch, n_kv_heads, max_len, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def kv_ring_decode_step(cache: KVCache, q, k, v, *, scale: float | None = None):
+    """Sliding-window softmax decode with a ring buffer of size W=max_len.
+
+    The cache stores post-RoPE keys, so ring rotation does not disturb
+    relative positions. q: (B, Hq, h); k, v: (B, Hkv, h).
+    """
+    bsz, hq, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    w = cache.k.shape[2]
+    slot = jnp.mod(cache.pos, w)
+    kc = jax.lax.dynamic_update_index_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=2)
+    vc = jax.lax.dynamic_update_index_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=2)
+    qg = q.reshape(bsz, hkv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bngh,bnsh->bngs", qg, kc.astype(jnp.float32)) * scale
+    valid = jnp.arange(w) <= cache.pos  # until the ring is full
+    logits = jnp.where(valid[None, None, None, :], logits, jnp.finfo(jnp.float32).min)
+    wts = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngs,bnsh->bngh", wts, vc.astype(jnp.float32))
+    return out.reshape(bsz, hq, hd).astype(v.dtype), KVCache(kc, vc, cache.pos + 1)
+
+
+def poly_kv_decode_step(cache: KVCache, q, k, v, *, degree: int, scale: float):
+    """Exact polynomial attention decode with a full KV cache (quadratic
+    baseline; the paper's inference win is that polysketch does NOT need
+    this)."""
+    bsz, hq, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    kc = jax.lax.dynamic_update_index_in_dim(cache.k, k.astype(cache.k.dtype), cache.pos, axis=2)
+    vc = jax.lax.dynamic_update_index_in_dim(cache.v, v.astype(cache.v.dtype), cache.pos, axis=2)
+    qg = q.reshape(bsz, hkv, g, hd).astype(jnp.float32)
+    wts = (jnp.einsum("bngh,bnsh->bngs", qg, kc.astype(jnp.float32)) * scale) ** degree
+    mask = jnp.arange(kc.shape[2]) <= cache.pos
+    wts = jnp.where(mask[None, None, None, :], wts, 0.0)
+    den = 1.0 + jnp.sum(wts, axis=-1, keepdims=True)
+    out = jnp.einsum("bngs,bnsh->bngh", wts / den, vc.astype(jnp.float32))
+    return out.reshape(bsz, hq, hd).astype(v.dtype), KVCache(kc, vc, cache.pos + 1)
+
+
+def polysketch_prefill(cache: PolysketchCache, qm, km, q, k, v, *,
+                       degree: int, scale: float, local_exact: bool = True):
+    """Fill a PolysketchCache from a full prompt (B, H*, S, .) in one shot.
+
+    Folds all complete blocks into z; the remainder lands in the buffer.
+    Returns (outputs (B, Hq, S, h), cache) where outputs match the training
+    block algorithm exactly.
+    """
+    from repro.core.linear_attention import block_causal_linear_attention
+    bsz, hkv, s, hd = k.shape
+    hq = q.shape[1]
+    blk = cache.kbuf.shape[2]
+    g = hq // hkv
+    km_r = jnp.repeat(km, g, axis=1) if km.shape[1] != hq else km
+    k_r = jnp.repeat(k, g, axis=1)
+    v_r = jnp.repeat(v, g, axis=1)
+    if s <= blk:
+        out = block_causal_linear_attention(
+            qm, km_r, v_r, q, k_r, degree=degree, scale=scale,
+            block_size=s, local_exact=local_exact)
+    else:
+        # Zero-pad (post-sketch, so padded keys contribute zero weight) to a
+        # block multiple; padded query rows are sliced away.
+        from repro.utils import pad_to_multiple
+        args = [pad_to_multiple(x, blk, axis=2)[0]
+                for x in (qm, km_r, v_r, q, k_r)]
+        out = block_causal_linear_attention(
+            args[0], args[1], args[2], args[3], args[4], degree=degree,
+            scale=scale, block_size=blk, local_exact=local_exact)[:, :, :s]
+    n_full = (s // blk) * blk
+    rem = s - n_full
+    f32 = jnp.float32
+    kf = self_kron(km[:, :, :n_full].astype(f32))
+    ones = jnp.ones((bsz, hkv, n_full, 1), f32)
+    vv = jnp.concatenate([v[:, :, :n_full].astype(f32), ones], axis=-1)
+    z = cache.z + jnp.einsum("bnsf,bnsd->bnfd", kf, vv)
+    kbuf = jax.lax.dynamic_update_slice_in_dim(
+        cache.kbuf, k[:, :, n_full:].astype(cache.kbuf.dtype), 0, axis=2)
+    vbuf = jax.lax.dynamic_update_slice_in_dim(
+        cache.vbuf, v[:, :, n_full:].astype(cache.vbuf.dtype), 0, axis=2)
+    mbuf = jax.lax.dynamic_update_slice_in_dim(
+        cache.mbuf, km[:, :, n_full:].astype(f32), 0, axis=2)
+    del rem
+    return out, PolysketchCache(z=z, kbuf=kbuf, vbuf=vbuf, mbuf=mbuf,
+                                pos=cache.pos + s)
+
+
+def kv_decode_step(cache: KVCache, q, k, v, *, scale: float | None = None,
+                   window: int | None = None):
+    """One softmax decode step with a (optionally sliding-window) KV cache.
+
+    q: (B, Hq, h); k, v: (B, Hkv, h). Returns (out (B, Hq, h), new_cache).
+    """
+    bsz, hq, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    kc = jax.lax.dynamic_update_index_in_dim(cache.k, k.astype(cache.k.dtype), cache.pos, axis=2)
+    vc = jax.lax.dynamic_update_index_in_dim(cache.v, v.astype(cache.v.dtype), cache.pos, axis=2)
+    qg = q.reshape(bsz, hkv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bngh,bnsh->bngs", qg, kc.astype(jnp.float32)) * scale
+    idx = jnp.arange(kc.shape[2])
+    mask = idx <= cache.pos
+    if window is not None:
+        mask = mask & (idx > cache.pos - window)
+    logits = jnp.where(mask[None, None, None, :], logits, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngs,bnsh->bngh", w, vc.astype(jnp.float32))
+    return out.reshape(bsz, hq, hd).astype(v.dtype), KVCache(kc, vc, cache.pos + 1)

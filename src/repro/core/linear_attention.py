@@ -1,0 +1,137 @@
+"""Block-based causal linear attention (paper Sections 3.1 / 3.2).
+
+Pure-JAX (paper-faithful) implementation of the block lower-triangular
+combine. This is the baseline path; the fused Pallas kernel in
+kernels/polysketch_causal.py implements the same contract and is validated
+against this module.
+
+Inputs use sketched *half* features m = sketch_half(x) in R^r; the
+r^2-dimensional feature map phi'(x) = self_kron(m) is materialized blockwise
+only, so peak memory is O(b * r^2) not O(n * r^2) on the pure-JAX path
+(XLA may still fuse further).
+
+Contract (single head; batched via leading dims):
+  out_i = [ sum_{j<=i} w_ij v_j ] / (1 + sum_{j<=i} w_ij)
+  w_ij  = (<q_i, k_j> * scale)^degree            if i,j in same block & local_exact
+        = <m(q_i), m(k_j)>^2                     otherwise (sketched, scaled inputs)
+For consistency the sketch is fed q*sqrt(scale), k*sqrt(scale) by the caller
+so that <m(q),m(k)>^2 ~= (<q,k>*scale)^degree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import self_kron
+
+
+def _blockify(x, b):
+    """(..., S, d) -> (..., t, b, d); S must be divisible by b."""
+    *lead, s, d = x.shape
+    assert s % b == 0, (s, b)
+    return x.reshape(*lead, s // b, b, d)
+
+
+def block_causal_linear_attention(qm, km, v, q=None, k=None, *,
+                                  degree: int = 4,
+                                  scale: float | None = None,
+                                  block_size: int = 256,
+                                  local_exact: bool = True,
+                                  unroll: bool = False):
+    """Causal polysketch attention via the paper's block algorithm (S3.1).
+
+    qm, km: (..., S, r) degree-p/2 sketches (already include the scale).
+    v:      (..., S, h)
+    q, k:   (..., S, h) raw (post-LN) vectors; required iff local_exact.
+    Returns (..., S, h).
+
+    Implemented as the paper specifies: a sequential prefix over the t = S/b
+    blocks (lax.scan), carrying Z_l = sum_{j<l} phi'(K_j)^T [V_j, 1]. Only
+    ONE block's phi' features (b x r^2) are ever materialized, so peak
+    activation memory is O(S(r+h) + b r^2) — the blow-up-free property that
+    makes 32k+ contexts trainable. `unroll=True` replaces the scan with a
+    Python loop (used by the dry-run cost probes; identical math).
+    """
+    *lead, s, r = qm.shape
+    h = v.shape[-1]
+    b = min(block_size, s)
+    assert s % b == 0, f"seq {s} not divisible by block {b}"
+    if local_exact:
+        assert q is not None and k is not None
+        if scale is None:
+            scale = 1.0 / q.shape[-1]
+
+    # Inputs stay in their storage dtype (bf16 in production) — halves the
+    # HBM traffic of the dominant streams; every contraction accumulates in
+    # f32 via preferred_element_type (same contract as the Pallas kernel).
+    f32 = jnp.float32
+    qm_b = _blockify(qm, b)
+    km_b = _blockify(km, b)
+    # Append an all-ones channel to V so numerator and denominator share one
+    # accumulator (the paper's (K^{(x)p})^T [V, 1] state).
+    v_b = _blockify(v, b)
+    ones = jnp.ones((*v_b.shape[:-1], 1), v_b.dtype)
+    vv_b = jnp.concatenate([v_b, ones], axis=-1)          # (..., t, b, h+1)
+    if local_exact:
+        q_b = _blockify(q, b)
+        k_b = _blockify(k, b)
+    else:
+        q_b = k_b = jnp.zeros((*qm_b.shape[:-1], 0), qm_b.dtype)
+    tri = jnp.tril(jnp.ones((b, b), f32))
+
+    def step(z, xs):
+        qm_l, km_l, vv_l, q_l, k_l = xs
+        # diagonal block P_l (exact local polynomial attention, S3.2)
+        if local_exact:
+            w = (jnp.einsum("...bh,...ch->...bc", q_l, k_l,
+                            preferred_element_type=f32) * scale) ** degree
+        else:
+            # (L R^T)^2 trick: phi'(Q)_l phi'(K)_l^T == (Q_m K_m^T)^2
+            w = jnp.einsum("...br,...cr->...bc", qm_l, km_l,
+                           preferred_element_type=f32) ** 2
+        w = w * tri
+        acc = jnp.einsum("...bc,...cd->...bd", w, vv_l.astype(f32))
+        # cross-block prefix through Z_l
+        qf = self_kron(qm_l)                               # (..., b, r^2)
+        acc += jnp.einsum("...bf,...fd->...bd", qf, z,
+                          preferred_element_type=f32)
+        # state update
+        kf = self_kron(km_l)
+        z = z + jnp.einsum("...bf,...bd->...fd", kf, vv_l,
+                           preferred_element_type=f32)
+        return z, acc
+
+    z0 = jnp.zeros((*lead, r * r, h + 1), f32)
+    t = s // b
+    move = lambda x: jnp.moveaxis(x, -3, 0)                # t to front for scan
+    xs = tuple(move(x) for x in (qm_b, km_b, vv_b, q_b, k_b))
+    if unroll:
+        accs = []
+        z = z0
+        for i in range(t):
+            z, acc = step(z, tuple(x[i] for x in xs))
+            accs.append(acc)
+        acc = jnp.stack(accs, 0)
+    else:
+        _, acc = jax.lax.scan(step, z0, xs)
+    acc = jnp.moveaxis(acc, 0, -3)                         # (..., t, b, h+1)
+    num, den = acc[..., :h], acc[..., h]
+    out = num / (1.0 + den)[..., None]
+    return out.reshape(*lead, s, h).astype(v.dtype)
+
+
+def noncausal_linear_attention(qm, km, v):
+    """Bidirectional (encoder) polysketch attention: two einsums, O(n r^2 h).
+
+    qm, km: (..., S, r); v: (..., S, h).
+    """
+    f32 = jnp.float32
+    kf = self_kron(km.astype(f32))
+    qf = self_kron(qm.astype(f32))
+    v32 = v.astype(f32)
+    ones = jnp.ones((*v32.shape[:-1], 1), f32)
+    vv = jnp.concatenate([v32, ones], axis=-1)
+    state = jnp.einsum("...sf,...sd->...fd", kf, vv)
+    acc = jnp.einsum("...sf,...fd->...sd", qf, state)
+    num, den = acc[..., :-1], acc[..., -1]
+    return (num / (1.0 + den)[..., None]).astype(v.dtype)

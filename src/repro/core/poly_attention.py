@@ -1,0 +1,109 @@
+"""Exact polynomial attention (paper Section 2.1).
+
+A^(p)_{ij} = <q'_i, k'_j>^p / (1 + sum_j' <q'_i, k'_j'>^p)   (causal: j <= i)
+
+where q', k' are LayerNorm'd queries/keys. We use scale = 1/h inside the
+power so that post-LayerNorm logits land in [-1, 1] before exponentiation
+(the paper's beta; A is invariant to beta, the scale exists purely for
+numerics).
+
+This module is the *oracle-grade* reference used by tests and by short
+context lengths (the paper computes the full attention matrix for ctx <= 1k);
+the production quadratic path is the Pallas kernel in kernels/poly_flash.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qk_layernorm(x, scale, bias, eps: float = 1e-6):
+    """Paper Section 2.1: LayerNorm on q and k before the polynomial."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale
+    if bias is not None:
+        y = y + bias
+    return y.astype(x.dtype)
+
+
+def poly_attention_full(q, k, v, *, degree: int, scale: float | None = None,
+                        causal: bool = True):
+    """Naive O(n^2) polynomial attention. q,k,v: (..., S, h) / (..., T, h).
+
+    Returns (..., S, h). Accumulates in f32.
+    """
+    h = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / h
+    logits = jnp.einsum("...sh,...th->...st", q, k).astype(jnp.float32) * scale
+    weights = logits ** degree
+    if causal:
+        s, t = weights.shape[-2], weights.shape[-1]
+        mask = jnp.tril(jnp.ones((s, t), dtype=bool), k=t - s)
+        weights = jnp.where(mask, weights, 0.0)
+    denom = 1.0 + jnp.sum(weights, axis=-1, keepdims=True)
+    out = jnp.einsum("...st,...th->...sh", weights / denom, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def sliding_attention_blocked(q, k, v, *, window: int,
+                              scale: float | None = None):
+    """Banded causal softmax attention in O(S * 2w) memory.
+
+    Queries are processed in blocks of size w; each block attends to itself
+    (masked) and the previous block — exactly the sliding window when
+    window <= w. q, k, v: (..., S, h)."""
+    *lead, s, h = q.shape
+    w = min(window, s)
+    if scale is None:
+        scale = 1.0 / float(h) ** 0.5
+    if s <= w or s % w != 0:
+        return softmax_attention_full(q, k, v, causal=True, window=window,
+                                      scale=scale)
+    t = s // w
+    f32 = jnp.float32
+    qb = q.reshape(*lead, t, w, h).astype(f32)
+    kb = k.reshape(*lead, t, w, h).astype(f32)
+    vb = v.reshape(*lead, t, w, h).astype(f32)
+    # previous block (zeros before block 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[..., :1, :, :]),
+                             kb[..., :-1, :, :]], axis=-3)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[..., :1, :, :]),
+                             vb[..., :-1, :, :]], axis=-3)
+    kcat = jnp.concatenate([kprev, kb], axis=-2)        # (..., t, 2w, h)
+    vcat = jnp.concatenate([vprev, vb], axis=-2)
+    logits = jnp.einsum("...tqh,...tkh->...tqk", qb, kcat) * scale
+    rows = jnp.arange(w)[:, None] + w                   # absolute pos in 2w
+    cols = jnp.arange(2 * w)[None, :]
+    mask = (cols <= rows) & (cols > rows - window)
+    first = jnp.arange(2 * w)[None, :] >= w             # block 0 has no prev
+    m = jnp.where(jnp.arange(t)[:, None, None] == 0, mask & first, mask)
+    logits = jnp.where(m, logits, jnp.finfo(f32).min)
+    wts = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("...tqk,...tkh->...tqh", wts, vcat)
+    return out.reshape(*lead, s, h).astype(v.dtype)
+
+
+def softmax_attention_full(q, k, v, *, scale: float | None = None,
+                           causal: bool = True, window: int | None = None):
+    """Reference softmax attention (optionally sliding-window)."""
+    h = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(h).astype(jnp.float32)
+    logits = jnp.einsum("...sh,...th->...st", q, k).astype(jnp.float32) * scale
+    s, t = logits.shape[-2], logits.shape[-1]
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), dtype=bool), k=t - s)
+        if window is not None:
+            rows = jnp.arange(s)[:, None] + (t - s)
+            cols = jnp.arange(t)[None, :]
+            mask = mask & (cols > rows - window)
+        logits = jnp.where(mask, logits, neg)
+    weights = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("...st,...th->...sh", weights, v.astype(jnp.float32))
+    return out.astype(v.dtype)

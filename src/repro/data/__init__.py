@@ -1,0 +1,4 @@
+from repro.data.loader import DataIterator
+from repro.data.synthetic import make_markov_lm, selective_copying, induction_heads
+
+__all__ = ["DataIterator", "make_markov_lm", "selective_copying", "induction_heads"]

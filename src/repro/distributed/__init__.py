@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (DEFAULT_RULES, spec_for,
+                                        shardings_for, batch_spec,
+                                        batch_shardings, replicated)
+
+__all__ = ["DEFAULT_RULES", "spec_for", "shardings_for", "batch_spec",
+           "batch_shardings", "replicated"]

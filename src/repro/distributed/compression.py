@@ -1,0 +1,53 @@
+"""Gradient compression for DP sync: int8 quantized all-to-all reduce.
+
+Ring all-reduce moves ~8 bytes/element (f32, 2 passes). The compressed
+schedule moves ~2 bytes/element:
+  1. per-destination-chunk int8 quantization (per-chunk max-abs scale),
+  2. all_to_all so each device owns one chunk from every peer,
+  3. local dequant + sum,
+  4. requantize, all_gather int8, dequant.
+~4x collective-byte reduction at <1e-2 relative error per step; error is
+zero-mean so SGD-style training tolerates it (error-feedback can be layered
+on top by keeping the residual in the optimizer state).
+
+Functions here are meant to run INSIDE shard_map over the DP axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant(x, axis=None):
+    scale = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(x / scale * 127.0), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_allreduce_mean(x, axis_name: str, axis_size: int):
+    """Compressed mean-all-reduce of x (any shape) over `axis_name`."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % axis_size
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(axis_size, -1)                 # row i -> device i
+    q, s = _quant(chunks, axis=1)                        # (N, c) int8, (N, 1)
+    q = jax.lax.all_to_all(q[:, None], axis_name, 0, 0)[:, 0]
+    s = jax.lax.all_to_all(s[:, None], axis_name, 0, 0)[:, 0]
+    part = jnp.sum(q.astype(jnp.float32) * s / 127.0, axis=0) / axis_size
+    q2, s2 = _quant(part)
+    q2 = jax.lax.all_gather(q2, axis_name)               # (N, c) int8
+    s2 = jax.lax.all_gather(s2, axis_name)               # (N,)
+    full = (q2.astype(jnp.float32) * (s2[:, None] / 127.0)).reshape(-1)
+    return full[:n].reshape(x.shape).astype(x.dtype)
+
+
+def tree_int8_allreduce_mean(tree, axis_name: str, axis_size: int):
+    return jax.tree_util.tree_map(
+        lambda g: int8_allreduce_mean(g, axis_name, axis_size), tree)
+
+
+def tree_psum_mean(tree, axis_name: str):
+    return jax.tree_util.tree_map(
+        lambda g: jax.lax.pmean(g, axis_name), tree)

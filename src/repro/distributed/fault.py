@@ -1,0 +1,85 @@
+"""Fault-tolerance utilities: preemption handling, straggler detection,
+retrying data access, elastic-restart bookkeeping.
+
+On a real cluster these hook into the scheduler (SIGTERM ahead of
+preemption, per-host step telemetry). Everything here is host-side Python —
+no device code — so it runs identically on CPU and TPU pods.
+"""
+from __future__ import annotations
+
+import logging
+import signal
+import time
+from collections import deque
+from typing import Callable
+
+log = logging.getLogger("repro.fault")
+
+
+class PreemptionGuard:
+    """SIGTERM -> finish the current step, checkpoint, exit cleanly."""
+
+    def __init__(self):
+        self.preempted = False
+        self._prev = None
+
+    def install(self):
+        def handler(signum, frame):
+            log.warning("SIGTERM received: checkpoint-and-exit requested")
+            self.preempted = True
+        self._prev = signal.signal(signal.SIGTERM, handler)
+        return self
+
+    def uninstall(self):
+        if self._prev is not None:
+            signal.signal(signal.SIGTERM, self._prev)
+
+
+class StragglerDetector:
+    """Flags steps (and, with per-host telemetry, hosts) that run slow.
+
+    Keeps a rolling window of step durations; a step > mu + z*sigma is
+    flagged. At scale the orchestrator feeds per-host sync times here and
+    evicts repeat offenders (we log; eviction is the scheduler's call).
+    """
+
+    def __init__(self, window: int = 50, z: float = 3.0, min_steps: int = 10):
+        self.durations: deque[float] = deque(maxlen=window)
+        self.z = z
+        self.min_steps = min_steps
+        self.flagged: list[tuple[int, float]] = []
+        self._t0 = None
+        self._step = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        dt = time.perf_counter() - self._t0
+        slow = False
+        if len(self.durations) >= self.min_steps:
+            mu = sum(self.durations) / len(self.durations)
+            var = sum((d - mu) ** 2 for d in self.durations) / len(self.durations)
+            if dt > mu + self.z * max(var, 1e-12) ** 0.5:
+                slow = True
+                self.flagged.append((self._step, dt))
+                log.warning("straggler step %d: %.3fs vs mean %.3fs",
+                            self._step, dt, mu)
+        self.durations.append(dt)
+        self._step += 1
+        return slow
+
+
+def with_retries(fn: Callable, *, retries: int = 3, backoff: float = 0.5,
+                 exceptions=(IOError, OSError)):
+    """Retry wrapper for flaky I/O (data shards, checkpoint storage)."""
+    def wrapped(*args, **kwargs):
+        for attempt in range(retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except exceptions as e:  # noqa: PERF203
+                if attempt == retries:
+                    raise
+                log.warning("retry %d/%d after %s", attempt + 1, retries, e)
+                time.sleep(backoff * (2 ** attempt))
+    return wrapped

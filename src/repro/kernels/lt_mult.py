@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for the paper's block lower-triangular multiply (S3.1).
+
+Computes O = lt(A B^T) C for A, B: (bh, n, m), C: (bh, n, k) without ever
+materializing the n x n product. The grid walks sequence blocks in order;
+the running prefix state Z_l = sum_{j<l} B_j^T C_j (an m x k matrix) lives
+in a VMEM scratch accumulator that persists across grid steps — the TPU
+analogue of the paper's sequential prefix sum (t = n/b dependent steps).
+
+VMEM budget per step: blocks (3*b*max(m,k) + b*k) + scratch m*k floats.
+With b=256, m=r=64, k=h+1=129 this is well under 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, c_ref, o_ref, z_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    a = a_ref[0].astype(jnp.float32)          # (b, m)
+    b = b_ref[0].astype(jnp.float32)          # (b, m)
+    c = c_ref[0].astype(jnp.float32)          # (b, k)
+    blk = a.shape[0]
+    w = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    tri = jnp.tril(jnp.ones((blk, blk), jnp.float32))
+    w = w * tri
+    local = jax.lax.dot(w, c, preferred_element_type=jnp.float32)
+    cross = jax.lax.dot(a, z_ref[...], preferred_element_type=jnp.float32)
+    o_ref[0] = (local + cross).astype(o_ref.dtype)
+    z_ref[...] += jax.lax.dot_general(b, c, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def lt_mult_pallas(a, b, c, *, block_size: int = 256, interpret: bool = False):
+    """a, b: (bh, n, m); c: (bh, n, k) -> (bh, n, k). n % block_size == 0."""
+    bh, n, m = a.shape
+    k = c.shape[-1]
+    blk = min(block_size, n)
+    assert n % blk == 0, (n, blk)
+    grid = (bh, n // blk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk, m), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, blk, m), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, blk, k), lambda i, t: (i, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk, k), lambda i, t: (i, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, k), c.dtype),
+        scratch_shapes=[pltpu.VMEM((m, k), jnp.float32)],
+        interpret=interpret,
+    )(a, b, c)

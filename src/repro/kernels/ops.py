@@ -1,0 +1,135 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Every op takes impl in {"pallas", "interpret", "xla"}:
+  - "pallas":    compiled Pallas TPU kernel (real hardware target),
+  - "interpret": Pallas interpret mode (CPU-correctness path used in tests),
+  - "xla":       pure-jnp implementation (paper-faithful baseline path; also
+                 the only option under SPMD tracing on the CPU container,
+                 so the dry-run lowers this path).
+
+Batching convention: leading dims (B, H, ...) are flattened to one `bh` axis
+before the kernel and restored after. GQA is handled by repeating kv heads
+to query heads (a deliberate simplicity/VMEM trade-off — keys are small).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear_attention import block_causal_linear_attention
+from repro.core.poly_attention import poly_attention_full
+from repro.kernels import ref as _ref
+from repro.kernels.lt_mult import lt_mult_pallas
+from repro.kernels.poly_flash import poly_flash_pallas
+from repro.kernels.polysketch_causal import polysketch_causal_pallas
+from repro.utils import pad_to_multiple
+
+DEFAULT_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "xla")
+
+
+def _flatten_bh(*xs):
+    lead = xs[0].shape[:-2]
+    flat = [x.reshape(-1, *x.shape[-2:]) for x in xs]
+    return lead, flat
+
+
+def lt_mult(a, b, c, *, block_size: int = 256, impl: str | None = None):
+    """lt(A B^T) C over the last two axes; leading dims are batch."""
+    impl = impl or DEFAULT_IMPL
+    if impl == "xla":
+        return _lt_mult_blocked_xla(a, b, c, block_size=block_size)
+    lead, (af, bf, cf) = _flatten_bh(a, b, c)
+    out = lt_mult_pallas(af, bf, cf, block_size=block_size,
+                         interpret=(impl == "interpret"))
+    return out.reshape(*lead, *out.shape[-2:])
+
+
+def _lt_mult_blocked_xla(a, b, c, *, block_size: int):
+    """Paper-faithful S3.1 block algorithm in plain XLA ops."""
+    n = a.shape[-2]
+    blk = min(block_size, n)
+    assert n % blk == 0
+    t = n // blk
+    f32 = jnp.float32
+    ab = a.reshape(*a.shape[:-2], t, blk, a.shape[-1]).astype(f32)
+    bb = b.reshape(*b.shape[:-2], t, blk, b.shape[-1]).astype(f32)
+    cb = c.reshape(*c.shape[:-2], t, blk, c.shape[-1]).astype(f32)
+    h = jnp.einsum("...tbm,...tbk->...tmk", bb, cb)
+    z = jnp.cumsum(h, axis=-3) - h
+    tri = jnp.tril(jnp.ones((blk, blk), f32))
+    w = jnp.einsum("...tbm,...tcm->...tbc", ab, bb) * tri
+    out = jnp.einsum("...tbc,...tck->...tbk", w, cb)
+    out += jnp.einsum("...tbm,...tmk->...tbk", ab, z)
+    return out.reshape(*c.shape).astype(c.dtype)
+
+
+def polysketch_attention(qm, km, q, k, v, *, degree: int, scale: float,
+                         local_exact: bool = True, block_size: int = 256,
+                         impl: str | None = None, unroll: bool = False):
+    """Fused causal polysketch attention.
+
+    qm, km: (B, Hq|Hkv, S, r) sketched (pre-scaled) q/k; q: (B, Hq, S, h);
+    k, v: (B, Hkv, S, h). Returns (B, Hq, S, h).
+    """
+    impl = impl or DEFAULT_IMPL
+    hq, hkv = q.shape[-3], k.shape[-3]
+    if hkv != hq:  # GQA: repeat kv to query heads
+        g = hq // hkv
+        km = jnp.repeat(km, g, axis=-3) if km.shape[-3] != hq else km
+        k = jnp.repeat(k, g, axis=-3)
+        v = jnp.repeat(v, g, axis=-3)
+    n = q.shape[-2]
+    blk = min(block_size, n)
+    if impl == "xla":
+        if n % blk:
+            # zero-pad post-sketch: padded keys contribute zero weight
+            qm, km, q, k, v = (pad_to_multiple(x, blk, axis=-2)[0]
+                               for x in (qm, km, q, k, v))
+        out = block_causal_linear_attention(
+            qm, km, v, q, k, degree=degree, scale=scale,
+            block_size=blk, local_exact=local_exact, unroll=unroll)
+        return out[..., :n, :]
+    qm, _ = pad_to_multiple(qm, blk, axis=-2)
+    km, _ = pad_to_multiple(km, blk, axis=-2)
+    q, _ = pad_to_multiple(q, blk, axis=-2)
+    k, _ = pad_to_multiple(k, blk, axis=-2)
+    v, _ = pad_to_multiple(v, blk, axis=-2)
+    lead, (qmf, kmf, qf, kf, vf) = _flatten_bh(qm, km, q, k, v)
+    out = polysketch_causal_pallas(
+        qmf, kmf, qf, kf, vf, degree=degree, scale=scale,
+        local_exact=local_exact, block_size=blk,
+        interpret=(impl == "interpret"))
+    out = out.reshape(*lead, *out.shape[-2:])
+    return out[..., :n, :]
+
+
+def poly_attention(q, k, v, *, degree: int, scale: float | None = None,
+                   causal: bool = True, block_q: int = 256,
+                   block_kv: int = 256, impl: str | None = None):
+    """Exact (quadratic) polynomial attention. q,k,v: (B, H, S, h)."""
+    impl = impl or DEFAULT_IMPL
+    if scale is None:
+        scale = 1.0 / q.shape[-1]
+    hq, hkv = q.shape[-3], k.shape[-3]
+    if hkv != hq:
+        g = hq // hkv
+        k = jnp.repeat(k, g, axis=-3)
+        v = jnp.repeat(v, g, axis=-3)
+    if impl == "xla":
+        return poly_attention_full(q, k, v, degree=degree, scale=scale,
+                                   causal=causal)
+    lead, (qf, kf, vf) = _flatten_bh(q, k, v)
+    out = poly_flash_pallas(qf, kf, vf, degree=degree, scale=scale,
+                            causal=causal, block_q=block_q,
+                            block_kv=block_kv,
+                            interpret=(impl == "interpret"))
+    return out.reshape(*lead, *out.shape[-2:])
+
+
+REFS = {
+    "lt_mult": _ref.lt_mult_ref,
+    "polysketch_causal": _ref.polysketch_causal_ref,
+    "poly_flash": _ref.poly_flash_ref,
+}

@@ -1,0 +1,89 @@
+"""FlashAttention-style *exact* polynomial attention Pallas TPU kernel.
+
+The paper's quadratic baseline (Polynomial p=4/8). Simpler than softmax
+flash: x^p needs no running max, so the online state is just the f32
+numerator/denominator accumulators for the current query block. Grid is
+(bh, n/bq, n/bkv) with the kv axis innermost; blocks with j > i are skipped
+(causal), the j == i block applies the triangular mask, and the output is
+written once at the final kv step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, den_ref, *,
+            degree: int, scale: float, causal: bool, kv_steps: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    run = (j <= i) if causal else True
+
+    @pl.when(run)
+    def _():
+        f32 = jnp.float32
+        q = q_ref[0].astype(f32)
+        k = k_ref[0].astype(f32)
+        v = v_ref[0].astype(f32)
+        w = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=f32) * scale
+        w = w ** degree
+        if causal:
+            bq, bk = w.shape
+            rows = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            diag_mask = jnp.where(rows >= cols, 1.0, 0.0)
+            w = jnp.where(j == i, w * diag_mask, w)
+        acc_ref[...] += jax.lax.dot(w, v, preferred_element_type=f32)
+        den_ref[...] += jnp.sum(w, axis=-1, keepdims=True)
+
+    @pl.when(j == kv_steps - 1)
+    def _():
+        o_ref[0] = (acc_ref[...] / (1.0 + den_ref[...])).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("degree", "scale", "causal", "block_q", "block_kv",
+                     "interpret"))
+def poly_flash_pallas(q, k, v, *, degree: int, scale: float,
+                      causal: bool = True, block_q: int = 256,
+                      block_kv: int = 256, interpret: bool = False):
+    """q: (bh, n, h); k, v: (bh, t, h) -> (bh, n, h)."""
+    bh, n, h = q.shape
+    t = k.shape[1]
+    bq = min(block_q, n)
+    bkv = min(block_kv, t)
+    assert n % bq == 0 and t % bkv == 0, (n, bq, t, bkv)
+    assert not causal or (n == t and bq == bkv), \
+        "causal requires square attention and equal q/kv blocks"
+    kv_steps = t // bkv
+    grid = (bh, n // bq, kv_steps)
+    kernel = functools.partial(_kernel, degree=degree, scale=scale,
+                               causal=causal, kv_steps=kv_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, h), lambda i_bh, i, j: (i_bh, i, 0)),
+            pl.BlockSpec((1, bkv, h), lambda i_bh, i, j: (i_bh, j, 0)),
+            pl.BlockSpec((1, bkv, h), lambda i_bh, i, j: (i_bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, h), lambda i_bh, i, j: (i_bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, h), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, h), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

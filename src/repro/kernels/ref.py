@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the allclose test sweeps; they are written
+for clarity (O(n^2) where that is simplest), not speed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.poly_attention import poly_attention_full
+
+
+def lt_mult_ref(a, b, c):
+    """lt(A B^T) C — paper Section 3.1 contract (diagonal included).
+
+    a, b: (..., n, m); c: (..., n, k) -> (..., n, k), f32 accumulation.
+    """
+    w = jnp.einsum("...im,...jm->...ij", a.astype(jnp.float32), b.astype(jnp.float32))
+    n = w.shape[-1]
+    w = w * jnp.tril(jnp.ones((n, n), jnp.float32))
+    out = jnp.einsum("...ij,...jk->...ik", w, c.astype(jnp.float32))
+    return out.astype(c.dtype)
+
+
+def polysketch_causal_ref(qm, km, q, k, v, *, degree: int, scale: float,
+                          block_size: int, local_exact: bool = True):
+    """Naive O(n^2) oracle for fused causal polysketch attention.
+
+    Same-block pairs use exact (<q,k>*scale)^degree weights (if local_exact)
+    else the (L R^T)^2 sketched weights; cross-block pairs always use the
+    sketched weights. qm, km: (..., n, r); q, k, v: (..., n, h).
+    """
+    n = qm.shape[-2]
+    f32 = jnp.float32
+    sk = jnp.einsum("...ir,...jr->...ij", qm.astype(f32), km.astype(f32)) ** 2
+    if local_exact:
+        ex = (jnp.einsum("...ih,...jh->...ij", q.astype(f32), k.astype(f32)) * scale) ** degree
+    else:
+        ex = sk
+    blk = jnp.arange(n) // block_size
+    same = blk[:, None] == blk[None, :]
+    tri = jnp.tril(jnp.ones((n, n), bool))
+    w = jnp.where(same, ex, sk) * tri
+    den = 1.0 + jnp.sum(w, axis=-1)
+    out = jnp.einsum("...ij,...jh->...ih", w, v.astype(f32)) / den[..., None]
+    return out.astype(v.dtype)
+
+
+def poly_flash_ref(q, k, v, *, degree: int, scale: float | None = None,
+                   causal: bool = True):
+    """Exact polynomial attention oracle (== core.poly_attention_full)."""
+    return poly_attention_full(q, k, v, degree=degree, scale=scale, causal=causal)

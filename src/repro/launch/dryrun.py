@@ -1,0 +1,362 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), record memory_analysis,
+cost_analysis and the collective schedule, and derive the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single,multi --out experiments/dryrun.json
+
+Results are cached incrementally in the output JSON; finished cells are
+skipped unless --force.
+
+TPU v5e roofline constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. cost_analysis() is per-device post-SPMD (verified), so:
+  compute term    = flops / PEAK_FLOPS
+  memory term     = bytes accessed / HBM_BW
+  collective term = per-device collective operand bytes / LINK_BW
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, SHAPES, TrainConfig, get_config
+from repro.distributed.sharding import (DEFAULT_RULES, activation_sharding,
+                                        batch_shardings, replicated,
+                                        shardings_for, spec_for)
+from repro.launch.hlo import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, input_specs
+from repro.optim.adamw import AdamWState
+from repro.serve.engine import make_serve_fns
+from repro.train.step import TrainState, make_train_step
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def abstract_init(model, key=None):
+    """(params SDS tree, logical axes tree) without allocating anything."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    box = {}
+
+    def f(k):
+        p, a = model.init(k)
+        box["axes"] = a
+        return p
+
+    params_sds = jax.eval_shape(f, key)
+    return params_sds, box["axes"]
+
+
+def _f32_like(sds_tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), sds_tree)
+
+
+def cache_shardings(cache_sds, mesh, cfg, batch, rules=None):
+    """Heuristic: shard batch dims over dp axes, exact head-count dims over
+    "model" (when divisible); everything else replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = [a for a in (rules or DEFAULT_RULES)["batch"] if a in sizes]
+    dp_prod = 1
+    dp_group = []
+    for a in dp:
+        if batch % (dp_prod * sizes[a]) == 0:
+            dp_group.append(a)
+            dp_prod *= sizes[a]
+    heads = {cfg.n_heads, cfg.n_kv_heads}
+
+    def one(s):
+        spec = []
+        used = set(dp_group)
+        batch_done = False
+        for d in s.shape:
+            if not batch_done and d == batch and dp_group:
+                spec.append(tuple(dp_group) if len(dp_group) > 1 else dp_group[0])
+                batch_done = True
+            elif d in heads and "model" in sizes and "model" not in used \
+                    and d % sizes["model"] == 0:
+                spec.append("model")
+                used.add("model")
+            else:
+                spec.append(None)
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, cache_sds)
+
+
+def model_flops(cfg, params_sds, n_tokens: int, *, train: bool) -> float:
+    """6*N*D (train) / 2*N*D (inference); N = active params."""
+    flat = jax.tree_util.tree_flatten_with_path(params_sds)[0]
+    n_active = 0.0
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        size = 1.0
+        for d in leaf.shape:
+            size *= d
+        if "ffn" in path and cfg.ffn == "moe" and any(
+                w in path for w in ("wi", "wg", "wo")):
+            size *= cfg.moe_top_k / cfg.n_experts
+        n_active += size
+    mult = 6.0 if train else 2.0
+    return mult * n_active * n_tokens
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               rules=None, overrides=None):
+    overrides = dict(overrides or {})
+    microbatches = int(overrides.pop("microbatches", 1))
+    cfg = get_config(arch, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    model = build_model(cfg)
+    params_sds, axes = abstract_init(model)
+    params_sh = shardings_for(axes, params_sds, mesh, rules)
+    specs = input_specs(cfg, shape)
+    bsh = batch_shardings(mesh, specs, rules)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(seq_len=shape.seq_len,
+                           global_batch=shape.global_batch, steps=1000,
+                           microbatches=microbatches)
+        step = make_train_step(model, cfg, tcfg)
+        opt_sh = AdamWState(m=_opt_sh(params_sh), v=_opt_sh(params_sh),
+                            count=replicated(mesh))
+        state_sh = TrainState(params=params_sh, opt=opt_sh,
+                              step=replicated(mesh))
+        state_sds = TrainState(
+            params=params_sds,
+            opt=AdamWState(m=_f32_like(params_sds), v=_f32_like(params_sds),
+                           count=jax.ShapeDtypeStruct((), jnp.int32)),
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        with mesh, activation_sharding(mesh, rules):
+            jitted = jax.jit(step, in_shardings=(state_sh, bsh))
+            lowered = jitted.lower(state_sds, specs)
+        tokens = shape.global_batch * shape.seq_len
+        mf = model_flops(cfg, params_sds, tokens, train=True)
+
+    elif shape.kind == "prefill":
+        prefill, _ = make_serve_fns(model, cfg)
+        with mesh, activation_sharding(mesh, rules):
+            jitted = jax.jit(prefill, in_shardings=(params_sh, bsh))
+            lowered = jitted.lower(params_sds, specs)
+        tokens = shape.global_batch * shape.seq_len
+        mf = model_flops(cfg, params_sds, tokens, train=False)
+
+    else:  # decode: one token against a seq_len-deep context state
+        _, decode = make_serve_fns(model, cfg)
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(None, shape.global_batch, shape.seq_len))
+        cache_sh = cache_shardings(cache_sds, mesh, cfg, shape.global_batch,
+                                   rules)
+        tok_sds = specs["tokens"]
+        pos_sds = jax.ShapeDtypeStruct((1,), jnp.int32)
+        with mesh, activation_sharding(mesh, rules):
+            jitted = jax.jit(
+                decode,
+                in_shardings=(params_sh, bsh["tokens"], cache_sh,
+                              replicated(mesh)))
+            lowered = jitted.lower(params_sds, tok_sds, cache_sds, pos_sds)
+        tokens = shape.global_batch
+        mf = model_flops(cfg, params_sds, tokens, train=False)
+
+    return lowered, mf, n_dev
+
+
+def _opt_sh(params_sh):
+    return jax.tree_util.tree_map(lambda s: s, params_sh)
+
+
+def probe_plan(cfg):
+    """Layer-count surgery for the scan-body cost correction.
+
+    lax.scan lowers to a while loop and XLA's cost_analysis counts the body
+    ONCE, not x trip-count. We therefore compile two probe models with 1 and
+    2 pattern groups and extrapolate linearly:
+        corrected = probe1 + (n_groups - 1) * (probe2 - probe1)
+    The full-model compile remains the source of truth for memory analysis
+    and for proving the (arch x shape x mesh) cell actually compiles.
+    """
+    from repro.models.transformer import effective_pattern
+    g = len(effective_pattern(cfg))
+    rem = cfg.n_layers % g
+    n_groups = cfg.n_layers // g
+    over1 = {"n_layers": rem + g, "unroll_layers": True}
+    over2 = {"n_layers": rem + 2 * g, "unroll_layers": True}
+    if cfg.encoder_layers:
+        # whisper: encoder stack must share the decoder's multiplier
+        assert cfg.encoder_layers == n_groups, (cfg.encoder_layers, n_groups)
+        over1["encoder_layers"] = 1
+        over2["encoder_layers"] = 2
+    return over1, over2, n_groups
+
+
+def _probe_costs(arch, shape_name, multi_pod, rules, overrides):
+    lowered, _, n_dev = lower_cell(arch, shape_name, multi_pod, rules=rules,
+                                   overrides=overrides)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text(), n_dev)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll["total_bytes"])}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, rules=None,
+             overrides=None) -> dict:
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    try:
+        t0 = time.time()
+        lowered, mf, n_dev = lower_cell(arch, shape_name, multi_pod,
+                                        rules=rules, overrides=overrides)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        ca = compiled.cost_analysis()
+        ma = compiled.memory_analysis()
+        text = compiled.as_text()
+        coll = parse_collectives(text, n_dev)
+
+        # scan-body cost correction via two layer-count probes. The
+        # roofline table is single-pod only; multi-pod cells are the
+        # compile/fit proof, so they skip the probe compiles.
+        rec["flops_scan_reported"] = float(ca.get("flops", 0.0))
+        if not multi_pod:
+            cfg_over = {k: v for k, v in (overrides or {}).items()
+                        if k != "microbatches"}
+            cfg = get_config(arch, **cfg_over)
+            over1, over2, n_groups = probe_plan(cfg)
+            t0 = time.time()
+            p1 = _probe_costs(arch, shape_name, multi_pod, rules,
+                              {**(overrides or {}), **over1})
+            p2 = _probe_costs(arch, shape_name, multi_pod, rules,
+                              {**(overrides or {}), **over2})
+            rec["probe_s"] = round(time.time() - t0, 1)
+            flops = p1["flops"] + (n_groups - 1) * max(0.0, p2["flops"] - p1["flops"])
+            bytes_acc = p1["bytes"] + (n_groups - 1) * max(0.0, p2["bytes"] - p1["bytes"])
+            coll_bytes = p1["coll"] + (n_groups - 1) * max(0.0, p2["coll"] - p1["coll"])
+            # gradient-accumulation scan body is also counted once by XLA;
+            # scale whole-step traffic/flops by the microbatch trip count
+            # (optimizer ops outside the scan are small vs the body).
+            mb = int((overrides or {}).get("microbatches", 1))
+            if mb > 1:
+                flops *= mb
+                bytes_acc *= mb
+                coll_bytes *= mb
+                rec["microbatch_scaled"] = mb
+            coll = dict(coll, total_bytes=int(coll_bytes))
+        else:
+            rec["cost_correction"] = "none (scan body counted once)"
+            flops = float(ca.get("flops", 0.0))
+            bytes_acc = float(ca.get("bytes accessed", 0.0))
+        rec.update(
+            ok=True,
+            n_devices=n_dev,
+            flops_per_device=flops,
+            bytes_per_device=bytes_acc,
+            collective_bytes_per_device=coll["total_bytes"],
+            collectives=coll["per_op"],
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "code_bytes": ma.generated_code_size_in_bytes,
+            },
+            model_flops_total=mf,
+            compute_term_s=flops / PEAK_FLOPS,
+            memory_term_s=bytes_acc / HBM_BW,
+            collective_term_s=coll["total_bytes"] / LINK_BW,
+            useful_flops_ratio=(mf / n_dev) / flops if flops else 0.0,
+        )
+        terms = {"compute": rec["compute_term_s"],
+                 "memory": rec["memory_term_s"],
+                 "collective": rec["collective_term_s"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+    except Exception as e:  # noqa: BLE001 — record, don't abort the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=10)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (e.g. attention=softmax)")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding rule override name=axis1,axis2 (empty = replicate)")
+    ap.add_argument("--tag", default="", help="suffix for the result key")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    overrides = {}
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    rules = None
+    if args.rule:
+        rules = dict(DEFAULT_RULES)
+        for kv in args.rule:
+            k, _, v = kv.partition("=")
+            rules[k] = tuple(a for a in v.split(",") if a)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        # always preserve existing results; --force only disables skipping
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                key = f"{arch}|{shape}|{mesh_kind}"
+                if overrides:
+                    key += "|" + ",".join(f"{k}={v}" for k, v in sorted(overrides.items()))
+                if args.tag:
+                    key += "#" + args.tag
+                if key in results and results[key].get("ok") and not args.force:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[run ] {key}", flush=True)
+                rec = run_cell(arch, shape, mesh_kind == "multi",
+                               rules=rules, overrides=overrides or None)
+                if args.rule:
+                    rec["rules"] = args.rule
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = "ok" if rec.get("ok") else f"FAIL {rec.get('error')}"
+                print(f"       -> {status} "
+                      f"(lower {rec.get('lower_s', '?')}s, "
+                      f"compile {rec.get('compile_s', '?')}s)", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"done: {n_ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

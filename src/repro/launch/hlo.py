@@ -1,0 +1,90 @@
+"""Post-SPMD HLO analysis: collective-byte accounting for the roofline.
+
+cost_analysis() does not report collective traffic, so we parse the
+compiled (per-device) module text and sum the *operand* bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Result types are inlined in optimized HLO; operand size is recovered from
+the result size and the op semantics (using the replica-group size g):
+  all-reduce          operand == result
+  all-gather          operand == result / g
+  reduce-scatter      operand == result * g
+  all-to-all          operand == result
+  collective-permute  operand == result
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(lhs: str) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _TYPE_RE.findall(lhs))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> dict:
+    """Returns {"total_bytes": int, "per_op": {op: {count, operand_bytes}}}."""
+    per_op = defaultdict(lambda: {"count": 0, "operand_bytes": 0})
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        op = None
+        for cand in _COLLECTIVES:
+            # match op name at call position, not in metadata
+            if re.search(rf"\b{cand}(-start)?\(", rhs):
+                op = cand
+                break
+        if op is None:
+            continue
+        # result type sits on the rhs before the op name:
+        #   %name = f32[128,128]{1,0} all-reduce(%operand), ...
+        rb = _result_bytes(rhs.split(op)[0])
+        if rb == 0:
+            rb = _result_bytes(lhs)
+        g = _group_size(rhs, n_devices)
+        if op == "all-gather":
+            ob = rb // max(g, 1)
+        elif op == "reduce-scatter":
+            ob = rb * g
+        else:
+            ob = rb
+        per_op[op]["count"] += 1
+        per_op[op]["operand_bytes"] += ob
+    total = sum(v["operand_bytes"] for v in per_op.values())
+    return {"total_bytes": total, "per_op": dict(per_op)}
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{opname}\(", hlo_text))

@@ -1,0 +1,86 @@
+"""Render the roofline table (EXPERIMENTS.md Section Roofline) from
+experiments/dryrun.json.
+
+  PYTHONPATH=src python -m repro.launch.roofline --in experiments/dryrun.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_seconds(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def advice(rec) -> str:
+    bn = rec["bottleneck"]
+    if bn == "memory":
+        return ("cut bytes: more aggressive remat trades to compute; "
+                "microbatching shrinks live activations; bf16 residuals")
+    if bn == "collective":
+        per = rec.get("collectives", {})
+        big = max(per.items(), key=lambda kv: kv[1]["operand_bytes"])[0] if per else "?"
+        return (f"dominant op {big}: reshard to kill it (FSDP gather "
+                f"overlap, head/seq-axis resharding, vocab padding)")
+    return "compute-bound: raise MXU utilization (fused kernel, bf16, tiling)"
+
+
+def render(results: dict, mesh_filter: str | None = "16x16") -> str:
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | bottleneck"
+        " | useful flops | fits (args+temp GB) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(results):
+        r = results[key]
+        if not r.get("ok"):
+            lines.append(f"| {r.get('arch', key)} | {r.get('shape', '')} | "
+                         f"{r.get('mesh', '')} | FAIL: "
+                         f"{r.get('error', '')[:60]} | | | | | |")
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter and "|" not in key.split("|")[-1]:
+            pass
+        mem = r["memory"]
+        gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_seconds(r['compute_term_s'])} | "
+            f"{fmt_seconds(r['memory_term_s'])} | "
+            f"{fmt_seconds(r['collective_term_s'])} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{gb:.1f} |")
+    return "\n".join(lines)
+
+
+def render_advice(results: dict) -> str:
+    lines = []
+    for key in sorted(results):
+        r = results[key]
+        if r.get("ok") and r["mesh"] == "16x16":
+            lines.append(f"- **{r['arch']} x {r['shape']}** "
+                         f"({r['bottleneck']}-bound): {advice(r)}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="experiments/dryrun.json")
+    ap.add_argument("--advice", action="store_true")
+    args = ap.parse_args()
+    with open(args.inp) as f:
+        results = json.load(f)
+    print(render(results))
+    if args.advice:
+        print()
+        print(render_advice(results))
+
+
+if __name__ == "__main__":
+    main()

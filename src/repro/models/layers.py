@@ -1,0 +1,96 @@
+"""Shared model layers: norms, dense/embedding init with logical axes, RoPE,
+GLU feed-forward. All init functions return (params, axes) pairs where axes
+mirrors the params tree with tuples of logical axis names per dimension
+(see distributed/sharding.py for the logical->mesh mapping)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import merge_trees
+
+
+def dense_init(key, d_in, d_out_dims, axes_names, scale=None):
+    """Weight of shape (d_in, *d_out_dims) with fan-in init."""
+    shape = (d_in, *d_out_dims)
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, shape, jnp.float32) * scale
+    return w, tuple(axes_names)
+
+
+def norm_init(dim, kind="rmsnorm"):
+    params = {"scale": jnp.ones((dim,), jnp.float32)}
+    axes = {"scale": (None,)}
+    if kind == "layernorm":
+        params["bias"] = jnp.zeros((dim,), jnp.float32)
+        axes["bias"] = (None,)
+    return params, axes
+
+
+def norm_apply(params, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    if "bias" in params:
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def embedding_init(key, vocab, d_model):
+    w = jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+    return {"table": w}, {"table": ("vocab", "embed")}
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embeddings. x: (B, H, S, h), positions: (S,) or (B, S)."""
+    h = x.shape[-1]
+    half = h // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]   # (S, half)
+        ang = ang[None, None]                                           # (1,1,S,half)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs          # (B,S,half)
+        ang = ang[:, None]                                              # (B,1,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n, d):
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d - d // 2)]))
+    return pe
+
+
+def glu_ffn_init(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    wi, ai = dense_init(k1, d_model, (d_ff,), ("embed", "mlp"))
+    wg, ag = dense_init(k2, d_model, (d_ff,), ("embed", "mlp"))
+    wo, ao = dense_init(k3, d_ff, (d_model,), ("mlp", "embed"))
+    return {"wi": wi, "wg": wg, "wo": wo}, {"wi": ai, "wg": ag, "wo": ao}
+
+
+def glu_ffn_apply(params, x):
+    dt = x.dtype
+    h = jax.nn.gelu(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+    return h @ params["wo"].astype(dt)
+
+
+__all__ = [
+    "dense_init", "norm_init", "norm_apply", "embedding_init", "rope",
+    "sinusoidal_positions", "glu_ffn_init", "glu_ffn_apply", "merge_trees",
+]

@@ -1,0 +1,123 @@
+"""RecurrentGemma recurrent block: gated branches + temporal conv + RG-LRU.
+
+RG-LRU per channel:
+  r_t = sigmoid(W_a xc_t + b_a)
+  i_t = sigmoid(W_x xc_t + b_x)
+  log a_t = -c * softplus(Lambda) * r_t
+  h_t = exp(log a_t) h_{t-1} + sqrt(1 - exp(2 log a_t)) * (i_t * xc_t)
+
+The linear recurrence is evaluated with jax.lax.associative_scan (parallel
+prefix — the same primitive family as the paper's S3.1 prefix sums).
+Attention-free: the paper's technique is inapplicable here by design (noted
+in DESIGN.md); the hybrid's local-attention layers are where polysketch
+applies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.layers import dense_init
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    params, axes = {}, {}
+    params["w_gate"], axes["w_gate"] = dense_init(ks[0], d, (w,), ("embed", "rnn"))
+    params["w_in"], axes["w_in"] = dense_init(ks[1], d, (w,), ("embed", "rnn"))
+    params["conv_w"] = jax.random.normal(ks[2], (4, w), jnp.float32) * 0.1
+    axes["conv_w"] = (None, "rnn")
+    params["conv_b"] = jnp.zeros((w,), jnp.float32)
+    axes["conv_b"] = ("rnn",)
+    params["w_a"], axes["w_a"] = dense_init(ks[3], w, (w,), ("rnn", "rnn2"))
+    params["b_a"] = jnp.zeros((w,), jnp.float32)
+    axes["b_a"] = ("rnn",)
+    params["w_x"], axes["w_x"] = dense_init(ks[4], w, (w,), ("rnn", "rnn2"))
+    params["b_x"] = jnp.zeros((w,), jnp.float32)
+    axes["b_x"] = ("rnn",)
+    # init Lambda so a^c in [0.9, 0.999] as in the Griffin paper
+    lam = jnp.linspace(0.9, 0.999, w)
+    params["lambda"] = jnp.log(jnp.expm1(-jnp.log(lam) / cfg.rglru_c))
+    axes["lambda"] = ("rnn",)
+    params["w_out"], axes["w_out"] = dense_init(ks[5], w, (d,), ("rnn", "embed"))
+    return params, axes
+
+
+def _conv4(params, x, state=None):
+    """Causal width-4 depthwise conv. x: (B,S,W); state: (B,3,W)."""
+    kw = params["conv_w"].shape[0]
+    pad = (jnp.zeros((x.shape[0], kw - 1, x.shape[-1]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    out = sum(w[i] * xp[:, i:i + x.shape[1]] for i in range(kw))
+    return out + params["conv_b"].astype(x.dtype), xp[:, -(kw - 1):]
+
+
+def _rglru_coeffs(params, cfg, xc):
+    f32 = jnp.float32
+    x32 = xc.astype(f32)
+    r = jax.nn.sigmoid(x32 @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(x32 @ params["w_x"] + params["b_x"])
+    log_a = -cfg.rglru_c * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    return a, b
+
+
+def rglru_apply(params, cfg, x, *, mode="train", cache=None):
+    """x: (B,S,D) -> (y (B,S,D), new_cache)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(shard_act(x @ params["w_gate"].astype(dt),
+                                 "batch", "seq", "rnn"))
+    xin = shard_act(x @ params["w_in"].astype(dt), "batch", "seq", "rnn")
+
+    if mode == "decode":
+        xc, conv_state = _conv4(params, xin, cache["conv"])
+        a, b = _rglru_coeffs(params, cfg, xc[:, 0])
+        h = a * cache["h"] + b
+        y = h[:, None].astype(dt)
+        new_cache = {"h": h, "conv": conv_state}
+    else:
+        xc, conv_state = _conv4(params, xin)
+        a, b = _rglru_coeffs(params, cfg, xc)
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        y = h.astype(dt)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"h": h[:, -1], "conv": conv_state}
+
+    y = y * gate
+    return y @ params["w_out"].astype(dt), new_cache
+
+
+def rglru_init_cache(cfg, batch, dtype=jnp.float32):
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 3, w), dtype),
+    }
+
+
+def rglru_sequential_ref(params, cfg, x):
+    """Token-by-token oracle (no conv/gating — core recurrence only)."""
+    xc, _ = _conv4(params, x)
+    a, b = _rglru_coeffs(params, cfg, xc)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    init = jnp.zeros((x.shape[0], a.shape[-1]), jnp.float32)
+    _, hs = jax.lax.scan(step, init, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

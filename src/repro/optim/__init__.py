@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm, global_norm)
+from repro.optim.schedule import linear_warmup_linear_decay, cosine_decay
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "global_norm", "linear_warmup_linear_decay", "cosine_decay"]

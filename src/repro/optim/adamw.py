@@ -1,0 +1,80 @@
+"""AdamW with decoupled weight decay (paper recipe: b1=0.95, b2=0.98).
+
+Functional, pytree-based; moments kept in f32 and sharded like the params
+(same logical axes), so under FSDP the optimizer state is ZeRO-sharded for
+free.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: object
+    v: object
+    count: jax.Array
+
+
+def _wd_mask(params):
+    """Decay only matrices; skip biases/norms and frozen random sketches."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def decayable(kp, x):
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        if path.endswith("/g"):   # frozen random sketch projection
+            return 0.0
+        return 1.0 if x.ndim >= 2 else 0.0
+
+    leaves = [decayable(kp, x) for kp, x in flat]
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return AdamWState(m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.95, b2=0.98,
+                 eps=1e-8, weight_decay=0.1):
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+    mask = _wd_mask(params)
+
+    def upd(g, m, v, p, dm):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        step = step + weight_decay * dm * p.astype(jnp.float32)
+        return (p - lr * step.astype(p.dtype)).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params, mask)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(m=new_m, v=new_v, count=count)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm

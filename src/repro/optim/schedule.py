@@ -1,0 +1,32 @@
+"""LR schedules. Paper: linear warmup for the first 10% of steps, then
+linear decay (Appendix G)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_linear_decay(peak_lr: float, total_steps: int,
+                               warmup_frac: float = 0.1):
+    warm = max(1, int(total_steps * warmup_frac))
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        up = peak_lr * step / warm
+        down = peak_lr * jnp.maximum(0.0, (total_steps - step)) / max(1, total_steps - warm)
+        return jnp.where(step < warm, up, down)
+
+    return schedule
+
+
+def cosine_decay(peak_lr: float, total_steps: int, warmup_frac: float = 0.1,
+                 floor: float = 0.1):
+    warm = max(1, int(total_steps * warmup_frac))
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        up = peak_lr * step / warm
+        t = jnp.clip((step - warm) / max(1, total_steps - warm), 0.0, 1.0)
+        down = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warm, up, down)
+
+    return schedule

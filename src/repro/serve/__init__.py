@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeEngine, generate, make_serve_fns
+
+__all__ = ["ServeEngine", "generate", "make_serve_fns"]

@@ -1,0 +1,111 @@
+"""Batched serving engine.
+
+The paper's inference story: polysketch attention's decode state is O(1) in
+context length (r^2 x (h+1) per kv-head + one partial block), so a 500k
+context costs the same per token as a 1k context, and batch slots never
+fragment HBM the way a paged KV cache does.
+
+serve_prefill / serve_step are the functions the dry-run lowers for
+prefill_* / decode_* / long_* shape cells.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_serve_fns(model, cfg):
+    """Returns (prefill_fn, decode_fn).
+
+    prefill_fn(params, batch)            -> (last_logits, cache)
+    decode_fn(params, tokens, cache)     -> (logits, cache)   tokens (B, 1)
+    """
+
+    def prefill(params, batch):
+        cache = model.init_cache(params, batch["tokens"].shape[0],
+                                 batch["tokens"].shape[1])
+        logits, cache, _ = model.apply(params, batch, mode="prefill",
+                                       cache=cache)
+        return logits[:, -1], cache
+
+    def decode(params, tokens, cache, positions):
+        logits, cache, _ = model.apply(params, {"tokens": tokens},
+                                       mode="decode", cache=cache,
+                                       positions=positions)
+        return logits[:, -1], cache
+
+    return prefill, decode
+
+
+class GenerationResult(NamedTuple):
+    tokens: jax.Array     # (B, steps)
+    logits_last: jax.Array
+
+
+def generate(model, cfg, params, prompt: jax.Array, steps: int, *,
+             temperature: float = 0.0, rng=None, max_len: int | None = None):
+    """Greedy/temperature sampling loop. prompt: (B, S0) int32."""
+    prefill, decode = make_serve_fns(model, cfg)
+    bsz, s0 = prompt.shape
+    max_len = max_len or (s0 + steps)
+    cache = model.init_cache(params, bsz, max_len)
+    batch = {"tokens": prompt}
+    logits, cache, _ = model.apply(params, batch, mode="prefill", cache=cache)
+    last = logits[:, -1]
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+
+    def sample(rng, logits):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+
+    def body(carry, i):
+        rng, last, cache = carry
+        rng, sub = jax.random.split(rng)
+        tok = sample(sub, last)
+        logits, cache = decode(params, tok[:, None], cache,
+                               positions=jnp.array([s0]) + i)
+        return (rng, logits, cache), tok
+
+    (_, last, cache), toks = jax.lax.scan(body, (rng, last, cache),
+                                          jnp.arange(steps))
+    return GenerationResult(tokens=toks.T, logits_last=last)
+
+
+class ServeEngine:
+    """Minimal continuous-batching engine over fixed slots.
+
+    Requests are (prompt, n_steps); slots run lockstep decode; finished
+    slots are refilled from the queue. With polysketch caches, slot state is
+    context-length independent, so admission never depends on prompt length
+    (the scheduling headache that pages/evictions solve for softmax KV).
+    """
+
+    def __init__(self, model, cfg, params, *, slots: int = 4,
+                 max_len: int = 4096):
+        self.model, self.cfg, self.params = model, cfg, params
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: list[tuple[jax.Array, int]] = []
+        self.results: list[jax.Array] = []
+
+    def submit(self, prompt, n_steps: int):
+        self.queue.append((prompt, n_steps))
+
+    def run(self):
+        while self.queue:
+            batch = [self.queue.pop(0) for _ in range(min(self.slots, len(self.queue)))]
+            maxs = max(p.shape[-1] for p, _ in batch)
+            prompts = jnp.stack([
+                jnp.pad(p, (maxs - p.shape[-1], 0), constant_values=0)
+                for p, _ in batch])
+            steps = max(n for _, n in batch)
+            out = generate(self.model, self.cfg, self.params, prompts, steps,
+                           max_len=self.max_len)
+            for i, (_, n) in enumerate(batch):
+                self.results.append(out.tokens[i, :n])
+        return self.results

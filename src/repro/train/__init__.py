@@ -1,0 +1,5 @@
+from repro.train.step import (TrainState, init_train_state, make_loss_fn,
+                              make_train_step, make_manual_dp_train_step)
+
+__all__ = ["TrainState", "init_train_state", "make_loss_fn",
+           "make_train_step", "make_manual_dp_train_step"]

@@ -1,0 +1,65 @@
+"""Small shared utilities: pytree helpers, self-tensoring, dtype policy."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def self_kron(x: jax.Array) -> jax.Array:
+    """Self-tensoring x^{(x)2} over the last axis: (..., r) -> (..., r*r).
+
+    <self_kron(a), self_kron(b)> == <a, b>**2 >= 0, the paper's
+    non-negativity trick (Theorem 2.4).
+    """
+    r = x.shape[-1]
+    out = jnp.einsum("...i,...j->...ij", x, x)
+    return out.reshape(*x.shape[:-1], r * r)
+
+
+def merge_trees(**subtrees: tuple[dict, dict]) -> tuple[dict, dict]:
+    """Merge {name: (params, axes)} into a single (params, axes) pair."""
+    params = {k: v[0] for k, v in subtrees.items()}
+    axes = {k: v[1] for k, v in subtrees.items()}
+    return params, axes
+
+
+def leaf(value: jax.Array, names: tuple[str | None, ...]) -> tuple[jax.Array, tuple]:
+    assert value.ndim == len(names), (value.shape, names)
+    return value, names
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: PyTree) -> int:
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params
+    )
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int) -> tuple[jax.Array, int]:
+    """Zero-pad `axis` of x up to a multiple. Returns (padded, original_len)."""
+    n = x.shape[axis]
+    target = math.ceil(n / multiple) * multiple
+    if target == n:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad), n
+
+
+def tree_paths(params: PyTree) -> list[str]:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(params)[0]:
+        paths.append("/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp))
+    return paths

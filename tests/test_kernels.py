@@ -1,0 +1,120 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles in kernels/ref.py
+(shape x dtype grid, interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,m,k,blk", [(64, 8, 16, 16), (128, 32, 8, 32),
+                                       (96, 16, 16, 32), (256, 64, 64, 64)])
+@pytest.mark.parametrize("impl", ["xla", "interpret"])
+def test_lt_mult_sweep(n, m, k, blk, dtype, impl):
+    ks = jax.random.split(jax.random.PRNGKey(n + m), 3)
+    a = _rand(ks[0], (2, n, m), dtype)
+    b = _rand(ks[1], (2, n, m), dtype)
+    c = _rand(ks[2], (2, n, k), dtype)
+    out = ops.lt_mult(a, b, c, block_size=blk, impl=impl)
+    want = ref.lt_mult_ref(a, b, c)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(want, np.float32),
+                               atol=tol * n, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("degree", [2, 4, 8])
+@pytest.mark.parametrize("local_exact", [True, False])
+@pytest.mark.parametrize("impl", ["xla", "interpret"])
+def test_polysketch_causal_sweep(degree, local_exact, dtype, impl):
+    B, Hq, Hkv, S, hd, r, blk = 2, 4, 2, 96, 16, 8, 32
+    ks = jax.random.split(jax.random.PRNGKey(degree), 5)
+    qm = _rand(ks[0], (B, Hq, S, r), dtype) * 0.5
+    km = _rand(ks[1], (B, Hkv, S, r), dtype) * 0.5
+    q = _rand(ks[2], (B, Hq, S, hd), dtype)
+    k = _rand(ks[3], (B, Hkv, S, hd), dtype)
+    v = _rand(ks[4], (B, Hkv, S, hd), dtype)
+    scale = 1.0 / hd
+    out = ops.polysketch_attention(qm, km, q, k, v, degree=degree,
+                                   scale=scale, local_exact=local_exact,
+                                   block_size=blk, impl=impl)
+    g = Hq // Hkv
+    want = ref.polysketch_causal_ref(
+        qm, jnp.repeat(km, g, 1), q, jnp.repeat(k, g, 1),
+        jnp.repeat(v, g, 1), degree=degree, scale=scale, block_size=blk,
+        local_exact=local_exact)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("degree", [4, 8])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("impl", ["xla", "interpret"])
+def test_poly_flash_sweep(degree, causal, dtype, impl):
+    B, H, S, hd = 2, 2, 128, 16
+    ks = jax.random.split(jax.random.PRNGKey(degree + causal), 3)
+    q = _rand(ks[0], (B, H, S, hd), dtype)
+    k = _rand(ks[1], (B, H, S, hd), dtype)
+    v = _rand(ks[2], (B, H, S, hd), dtype)
+    out = ops.poly_attention(q, k, v, degree=degree, scale=1.0 / hd,
+                             causal=causal, block_q=32, block_kv=32,
+                             impl=impl)
+    want = ref.poly_flash_ref(q, k, v, degree=degree, scale=1.0 / hd,
+                              causal=causal)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(want, np.float32), atol=tol, rtol=tol)
+
+
+@given(n=st.sampled_from([32, 64, 96]), blk=st.sampled_from([16, 32]),
+       seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_lt_mult_property(n, blk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.normal(ks[0], (1, n, 8))
+    b = jax.random.normal(ks[1], (1, n, 8))
+    c = jax.random.normal(ks[2], (1, n, 4))
+    out = ops.lt_mult(a, b, c, block_size=blk, impl="interpret")
+    want = ref.lt_mult_ref(a, b, c)
+    np.testing.assert_allclose(np.array(out), np.array(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_polysketch_unaligned_seq_padding():
+    """Pallas path pads to a block multiple with zero keys."""
+    B, H, S, hd, r = 1, 2, 77, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    qm, km = (jax.random.normal(k, (B, H, S, r)) for k in ks[:2])
+    q, k, v = (jax.random.normal(kk, (B, H, S, hd)) for kk in ks[2:])
+    out = ops.polysketch_attention(qm, km, q, k, v, degree=4, scale=1.0 / hd,
+                                   block_size=32, impl="interpret")
+    want = ref.polysketch_causal_ref(qm, km, q, k, v, degree=4,
+                                     scale=1.0 / hd, block_size=32)
+    np.testing.assert_allclose(np.array(out), np.array(want), atol=1e-4)
+
+
+def test_kernel_grid_state_reset_between_heads():
+    """Scratch prefix state must reset at t==0 for every (batch, head)."""
+    B, H, S, hd, r = 1, 3, 64, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    qm, km = (jax.random.normal(k, (B, H, S, r)) for k in ks[:2])
+    q, k, v = (jax.random.normal(kk, (B, H, S, hd)) for kk in ks[2:])
+    out = ops.polysketch_attention(qm, km, q, k, v, degree=4, scale=1.0 / hd,
+                                   block_size=16, impl="interpret")
+    # head 2 computed alone must match head 2 computed in the batch
+    out_solo = ops.polysketch_attention(
+        qm[:, 2:], km[:, 2:], q[:, 2:], k[:, 2:], v[:, 2:], degree=4,
+        scale=1.0 / hd, block_size=16, impl="interpret")
+    np.testing.assert_allclose(np.array(out[:, 2:]), np.array(out_solo),
+                               atol=1e-5)

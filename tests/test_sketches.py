@@ -1,0 +1,110 @@
+"""Sketch properties: Theorem 1.1 (non-negativity, AMM error scaling),
+Algorithm 1/2 structure, parameter counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import init_sketch, qk_layernorm
+from repro.core.sketches import sketch_half
+from repro.utils import self_kron
+
+
+def _sketch_pair(seed, h, r, p, n=32, learned=False):
+    kq, kk, ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = qk_layernorm(jax.random.normal(kq, (n, h)), None, None) / np.sqrt(h)
+    k = qk_layernorm(jax.random.normal(kk, (n, h)), None, None) / np.sqrt(h)
+    params, _ = init_sketch(ks, h, r, p, learned=learned)
+    qm = sketch_half(params, q, p, learned)
+    km = sketch_half(params, k, p, learned)
+    return np.array(q), np.array(k), np.array(qm), np.array(km)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("learned", [False, True])
+def test_nonnegativity(p, learned):
+    """Theorem 1.1 property 1: <phi'(q), phi'(k)> >= 0 always."""
+    _, _, qm, km = _sketch_pair(0, 16, 16, p, learned=learned)
+    approx = (qm @ km.T) ** 2
+    assert (approx >= 0).all()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_nonnegativity_property(seed):
+    _, _, qm, km = _sketch_pair(seed, 8, 8, 4)
+    assert ((qm @ km.T) ** 2 >= -1e-9).all()
+
+
+def test_selfkron_identity():
+    x = np.random.default_rng(0).normal(size=(5, 7)).astype(np.float32)
+    y = np.random.default_rng(1).normal(size=(5, 7)).astype(np.float32)
+    fx, fy = np.array(self_kron(jnp.array(x))), np.array(self_kron(jnp.array(y)))
+    assert np.allclose(fx @ fy.T, (x @ y.T) ** 2, atol=1e-4)
+
+
+@pytest.mark.parametrize("p", [4, 8])
+def test_amm_error_decreases_with_r(p):
+    """Theorem 1.1 property 2: eps ~ r^{-1/2}."""
+    errs = {}
+    for r in (8, 32, 128):
+        trial = []
+        for seed in range(4):
+            q, k, qm, km = _sketch_pair(seed + 100, 16, r, p)
+            exact = (q @ k.T) ** p
+            approx = (qm @ km.T) ** 2
+            amm = np.sqrt(np.sum(
+                (np.linalg.norm(q, axis=1) ** (2 * p))[:, None]
+                * (np.linalg.norm(k, axis=1) ** (2 * p))[None, :]))
+            trial.append(np.linalg.norm(approx - exact) / amm)
+        errs[r] = np.mean(trial)
+    assert errs[32] < errs[8]
+    assert errs[128] < errs[32]
+    assert errs[128] < 0.1
+
+
+def test_sketch_unbiased_degree2():
+    """E[<m(q), m(k)>] == <q,k>^2 for the degree-2 random sketch."""
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=8).astype(np.float32)
+    k = rng.normal(size=8).astype(np.float32)
+    vals = []
+    for seed in range(200):
+        params, _ = init_sketch(jax.random.PRNGKey(seed), 8, 16, 4, False)
+        qm = sketch_half(params, jnp.array(q), 4, False)
+        km = sketch_half(params, jnp.array(k), 4, False)
+        vals.append(float(qm @ km))
+    assert abs(np.mean(vals) - float(q @ k) ** 2) < 0.3 * abs(float(q @ k) ** 2) + 0.1
+
+
+@pytest.mark.parametrize("p", [4, 8, 16])
+def test_degree_tree_structure(p):
+    params, axes = init_sketch(jax.random.PRNGKey(0), 8, 8, p, learned=False)
+    depth = 0
+    node = params
+    while "left" in node:
+        depth += 1
+        node = node["left"]
+    assert 2 ** (depth + 1) == p  # recursion runs at degree p/2
+
+
+def test_learned_sketch_param_count_matches_paper():
+    """Appendix D: each net ~8hr + 24r^2 params; p-2 nets total."""
+    h, r, p = 64, 32, 4
+    params, _ = init_sketch(jax.random.PRNGKey(0), h, r, p, learned=True)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    per_net = 8 * h * r + 24 * r * r + 2 * h + 4 * r  # + LN/bias terms
+    assert abs(n - (p - 2) * per_net) / n < 0.05
+
+
+def test_random_sketch_gradient_frozen():
+    params, _ = init_sketch(jax.random.PRNGKey(0), 8, 8, 4, learned=False)
+    x = jnp.ones((4, 8))
+
+    def loss(p):
+        return jnp.sum(sketch_half(p, x, 4, False) ** 2)
+
+    grads = jax.grad(loss)(params)
+    for g in jax.tree_util.tree_leaves(grads):
+        assert float(jnp.abs(g).max()) == 0.0

@@ -1,0 +1,129 @@
+"""End-to-end system tests: train -> checkpoint -> preemption/resume ->
+serve; loss actually drops; generation is deterministic vs stepwise decode;
+MoE model trains; masked-loss tasks train."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import TrainConfig, get_config
+from repro.data import DataIterator, make_markov_lm, selective_copying
+from repro.models import build_model
+from repro.serve import generate
+from repro.train import init_train_state, make_loss_fn, make_train_step
+
+
+def _train(cfg, steps=20, seed=0, batch=8, seq=64, lr=3e-3, state=None,
+           start=0, sample_fn=None, microbatches=1, run_to=None):
+    model = build_model(cfg)
+    if state is None:
+        params, _ = model.init(jax.random.PRNGKey(seed))
+        state = init_train_state(params)
+    tcfg = TrainConfig(seq_len=seq, global_batch=batch, steps=steps,
+                       peak_lr=lr, microbatches=microbatches)
+    step_fn = jax.jit(make_train_step(model, cfg, tcfg))
+    it = DataIterator(sample_fn or make_markov_lm(cfg.vocab_size, seed=7),
+                      batch, seq, seed=seed, start_step=start)
+    losses = []
+    for _ in range(start, run_to if run_to is not None else steps):
+        state, m = step_fn(state, next(it))
+        losses.append(float(m["loss"]))
+    return state, losses, it
+
+
+def test_train_loss_drops():
+    cfg = get_config("gpt2s-polysketch", smoke=True)
+    _, losses, _ = _train(cfg, steps=25)
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_train_moe_loss_drops():
+    cfg = get_config("dbrx-132b", smoke=True)
+    _, losses, _ = _train(cfg, steps=25)
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_train_hybrid_and_ssm():
+    for arch in ("recurrentgemma-9b", "mamba2-780m"):
+        cfg = get_config(arch, smoke=True)
+        _, losses, _ = _train(cfg, steps=15, lr=2e-3)
+        assert losses[-1] < losses[0], arch
+        assert np.isfinite(losses).all()
+
+
+def test_checkpoint_resume_bitexact(tmp_path):
+    """train(20) == train(10) -> checkpoint -> restore -> train(10)."""
+    cfg = get_config("gpt2s-polysketch", smoke=True)
+    sA, lossesA, _ = _train(cfg, steps=20)
+
+    # identical LR schedule (total=20), but stop at step 10
+    sB, _, itB = _train(cfg, steps=20, run_to=10)
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(10, sB, extras={"data": itB.state()})
+
+    target = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), sB)
+    step, restored, extras = mgr.restore_latest(target)
+    assert step == 10
+    sC, lossesC, _ = _train(cfg, steps=20, state=restored, start=10)
+    for a, b in zip(jax.tree_util.tree_leaves(sA.params),
+                    jax.tree_util.tree_leaves(sC.params)):
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-6)
+
+
+def test_masked_loss_selective_copying_learns():
+    cfg = get_config("gpt2s-polysketch", smoke=True).replace(
+        vocab_size=32, lt_block_size=16)
+
+    def sample(batch, seq, step):
+        return selective_copying(batch, seq, step, n_colors=8, n_memorize=4,
+                                 seed=5)
+
+    _, losses, _ = _train(cfg, steps=30, sample_fn=sample, lr=3e-3, seq=48)
+    assert losses[-1] < losses[0] - 0.2
+
+
+def test_generate_matches_manual_decode():
+    cfg = get_config("gpt2s-polysketch", smoke=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    out = generate(model, cfg, params, prompt, steps=6)
+    assert out.tokens.shape == (2, 6)
+    # manual: prefill then argmax-decode step by step
+    cache = model.init_cache(params, 2, 32)
+    logits, cache, _ = model.apply(params, {"tokens": prompt}, mode="prefill",
+                                   cache=cache)
+    last = logits[:, -1]
+    toks = []
+    for i in range(6):
+        t = jnp.argmax(last, -1).astype(jnp.int32)
+        toks.append(np.array(t))
+        last, cache, _ = model.apply(params, {"tokens": t[:, None]},
+                                     mode="decode", cache=cache,
+                                     positions=jnp.array([12 + i]))
+        last = last[:, -1]
+    np.testing.assert_array_equal(np.stack(toks, 1), np.array(out.tokens))
+
+
+def test_straggler_detector_flags_slow_step():
+    import time
+    from repro.distributed.fault import StragglerDetector
+    det = StragglerDetector(window=50, z=3.0, min_steps=5)
+    for _ in range(20):
+        det.start(); time.sleep(0.002); det.stop()
+    det.start(); time.sleep(0.08); slow = det.stop()
+    assert slow
+    assert any(dt > 0.05 for _, dt in det.flagged)
+
+
+def test_preemption_guard():
+    import os, signal
+    from repro.distributed.fault import PreemptionGuard
+    g = PreemptionGuard().install()
+    assert not g.preempted
+    os.kill(os.getpid(), signal.SIGTERM)
+    assert g.preempted
+    g.uninstall()
