@@ -13,6 +13,7 @@ MODULES = [
     "sketch_error",        # Theorem 1.1
     "kernel_bench",        # S3.1 lt-mult + linear-vs-quadratic attention
     "latency_vs_context",  # Figure 1 / Table 4
+    "serve_throughput",    # continuous batching; decode cost flat in ctx
     "quality_proxy",       # Figure 2 / Tables 2-3
     "selective_copying",   # Table 5 / Appendix F.1
     "induction_heads",     # Appendix F.2

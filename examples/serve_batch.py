@@ -1,5 +1,7 @@
-"""Batched serving demo: the polysketch decode state is O(1) in context
-length, so slot admission is independent of prompt length.
+"""Continuous-batching serving demo: the polysketch decode state is O(1)
+in context length, so slot admission is independent of prompt length —
+each request prefills at its own length and drops into a free slot while
+the other slots keep decoding.
 
   PYTHONPATH=src python examples/serve_batch.py
 """
@@ -7,4 +9,5 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     main(["--arch", "gpt2s-polysketch", "--smoke", "--requests", "6",
-          "--slots", "3", "--prompt-len", "48", "--gen", "16"])
+          "--slots", "3", "--prompt-len", "48", "--gen", "16",
+          "--rate", "8"])

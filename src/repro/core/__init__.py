@@ -11,7 +11,8 @@ from repro.core.linear_attention import (
 from repro.core.decode import (
     PolysketchCache, init_polysketch_cache, polysketch_decode_step,
     polysketch_prefill, KVCache, init_kv_cache, kv_decode_step,
-    kv_ring_decode_step, poly_kv_decode_step,
+    kv_ring_decode_step, poly_kv_decode_step, broadcast_slot_caches,
+    slot_scatter, slot_gather,
 )
 
 __all__ = [
@@ -20,5 +21,6 @@ __all__ = [
     "block_causal_linear_attention", "noncausal_linear_attention",
     "PolysketchCache", "init_polysketch_cache", "polysketch_decode_step",
     "polysketch_prefill", "KVCache", "init_kv_cache", "kv_decode_step",
-    "kv_ring_decode_step", "poly_kv_decode_step",
+    "kv_ring_decode_step", "poly_kv_decode_step", "broadcast_slot_caches",
+    "slot_scatter", "slot_gather",
 ]

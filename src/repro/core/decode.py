@@ -178,7 +178,6 @@ def polysketch_prefill(cache: PolysketchCache, qm, km, q, k, v, *,
             args[0], args[1], args[2], args[3], args[4], degree=degree,
             scale=scale, block_size=blk, local_exact=local_exact)[:, :, :s]
     n_full = (s // blk) * blk
-    rem = s - n_full
     f32 = jnp.float32
     kf = self_kron(km[:, :, :n_full].astype(f32))
     ones = jnp.ones((bsz, hkv, n_full, 1), f32)
@@ -190,9 +189,40 @@ def polysketch_prefill(cache: PolysketchCache, qm, km, q, k, v, *,
         cache.vbuf, v[:, :, n_full:].astype(cache.vbuf.dtype), 0, axis=2)
     mbuf = jax.lax.dynamic_update_slice_in_dim(
         cache.mbuf, km[:, :, n_full:].astype(f32), 0, axis=2)
-    del rem
     return out, PolysketchCache(z=z, kbuf=kbuf, vbuf=vbuf, mbuf=mbuf,
                                 pos=cache.pos + s)
+
+
+def broadcast_slot_caches(cache, slots: int):
+    """Replicate a batch-1 decode cache into a slot-stacked pytree.
+
+    Every leaf gains a leading slot axis: arrays (1, ...) -> (slots, 1, ...)
+    and the scalar `pos` becomes a (slots,) vector, so each serve slot
+    carries an independent position. Works for any of the cache pytrees in
+    this module (and the model-level dict-of-layers cache that stacks them).
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (slots,) + x.shape).copy(), cache)
+
+
+def slot_scatter(slot_caches, cache, slot):
+    """Write one slot's batch-1 cache into the slot-stacked pytree.
+
+    `slot` may be a traced int32 scalar, so a single jitted scatter serves
+    every slot index without retracing. Leaves of `cache` must match the
+    slot-stacked leaves with the leading slot axis removed.
+    """
+    return jax.tree_util.tree_map(
+        lambda full, one: jax.lax.dynamic_update_index_in_dim(
+            full, one.astype(full.dtype), slot, axis=0),
+        slot_caches, cache)
+
+
+def slot_gather(slot_caches, slot):
+    """Read one slot's batch-1 cache back out of the slot-stacked pytree."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, slot, axis=0,
+                                               keepdims=False), slot_caches)
 
 
 def kv_decode_step(cache: KVCache, q, k, v, *, scale: float | None = None,

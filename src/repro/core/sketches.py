@@ -167,14 +167,12 @@ def nonneg_features(params, x, degree: int, learned: bool):
 
 def sketch_param_count(h: int, r: int, degree: int, learned: bool) -> int:
     q = degree // 2
-    n_proj_h, n_proj_r = (0, 0)
-    levels = int(math.log2(q))
-    # level with input dim h appears at the q==2 recursion leaves.
+    # projections with input dim h live at the q==2 recursion leaves; all
+    # other (inner) nodes project r -> r.
     n_leaf_nodes = q // 2
     n_inner_nodes = (q - 1) - n_leaf_nodes
     n_proj_h = 2 * n_leaf_nodes
     n_proj_r = 2 * n_inner_nodes
-    del levels
     if learned:
         per_h = 2 * h + 8 * h * r + 8 * r + 8 * r * r + r + 2 * r + r * 8 * r + 8 * r + 8 * r * r + r
         per_r = 2 * r + 8 * r * r + 8 * r + 8 * r * r + r + 2 * r + r * 8 * r + 8 * r + 8 * r * r + r

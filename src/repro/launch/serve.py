@@ -1,7 +1,8 @@
-"""Serving launcher: batched generation with the O(1)-state polysketch cache.
+"""Serving launcher: continuous batching with the O(1)-state polysketch
+cache under a simulated Poisson arrival process.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2s-polysketch \
-      --smoke --requests 8 --prompt-len 64 --gen 32
+      --smoke --requests 8 --slots 4 --prompt-len 64 --gen 32 --rate 4
 """
 from __future__ import annotations
 
@@ -13,7 +14,42 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine, generate
+from repro.serve import ServeEngine
+
+
+def _percentile(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+def simulate(engine: ServeEngine, arrivals, *, quiet=False):
+    """Drive the engine under timed arrivals.
+
+    arrivals: list of (arrival_s, prompt, max_new_tokens, eos_id) sorted by
+    arrival time. Requests are submitted when the wall clock passes their
+    arrival offset and admitted at the next scheduler tick — live slots
+    are never re-prefilled or reset by an admission (the
+    continuous-batching point), though each tick's lockstep decode does
+    wait for that tick's prefills to finish first.
+    """
+    pending = list(arrivals)
+    outs = []
+    t0 = time.perf_counter()
+    while pending or engine.busy:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            _, prompt, gen, eos = pending.pop(0)
+            engine.submit(prompt, gen, eos)
+        if engine.busy:
+            for out in engine.step():
+                outs.append(out)
+                if not quiet:
+                    print(f"  req{out.rid}: len={out.prompt_len} "
+                          f"+{len(out.tokens)} tok ({out.finish_reason}) "
+                          f"ttft={out.ttft_s * 1e3:.0f}ms "
+                          f"latency={out.latency_s * 1e3:.0f}ms")
+        elif pending:
+            time.sleep(min(0.005, max(0.0, pending[0][0] - now)))
+    return outs, time.perf_counter() - t0
 
 
 def main(argv=None):
@@ -24,6 +60,11 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="mean request arrivals per second (Poisson); "
+                         "0 = all requests queued at t=0")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop generation at this token id (-1 = never)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -35,20 +76,36 @@ def main(argv=None):
     engine = ServeEngine(model, cfg, params, slots=args.slots,
                          max_len=args.prompt_len + args.gen)
     rng = np.random.default_rng(args.seed)
-    for i in range(args.requests):
-        plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
+
+    # A few fixed prompt-length buckets (not a continuum) keeps the
+    # per-length prefill retrace count bounded while still exercising
+    # mixed-length admission.
+    buckets = sorted({max(1, args.prompt_len // 2),
+                      max(1, 3 * args.prompt_len // 4), args.prompt_len})
+    eos = None if args.eos_id < 0 else args.eos_id
+    t = 0.0
+    arrivals = []
+    for _ in range(args.requests):
+        if args.rate > 0:
+            t += float(rng.exponential(1.0 / args.rate))
+        plen = int(rng.choice(buckets))
         prompt = jax.numpy.asarray(
             rng.integers(0, cfg.vocab_size, size=plen), dtype=jax.numpy.int32)
-        engine.submit(prompt, args.gen)
+        arrivals.append((t, prompt, args.gen, eos))
 
-    t0 = time.time()
-    results = engine.run()
-    dt = time.time() - t0
-    total_tokens = sum(int(r.shape[0]) for r in results)
-    print(f"served {len(results)} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
-    for i, r in enumerate(results[:4]):
-        print(f"  req{i}: {np.asarray(r)[:16]}")
+    outs, wall = simulate(engine, arrivals)
+    stats = engine.stats()
+    ttfts = [o.ttft_s for o in outs]
+    lats = [o.latency_s for o in outs]
+    print(f"served {stats['requests']} requests, "
+          f"{stats['generated_tokens']} tokens in {wall:.2f}s "
+          f"({stats['generated_tokens'] / wall:.1f} tok/s wall, "
+          f"{stats['decode_tok_per_s']:.1f} tok/s decode)")
+    print(f"ttft    p50={_percentile(ttfts, 50) * 1e3:.0f}ms "
+          f"p95={_percentile(ttfts, 95) * 1e3:.0f}ms")
+    print(f"latency p50={_percentile(lats, 50) * 1e3:.0f}ms "
+          f"p95={_percentile(lats, 95) * 1e3:.0f}ms")
+    return outs
 
 
 if __name__ == "__main__":

@@ -96,6 +96,11 @@ def init_cache(params, cfg, kind: str, batch: int, max_len: int, dtype):
     if kind == "local_attn":
         w = min(cfg.sliding_window, max_len)
         return dec.init_kv_cache(batch, hkv, hd, w, dtype)
+    # NB: every array leaf carries the batch on axis 0, but the scalar
+    # `pos` has none — a batched cache shares one position. Serving slots
+    # at different depths therefore stack batch-1 caches on a fresh
+    # leading slot axis (core.decode.broadcast_slot_caches) instead of
+    # batching this one.
     return dec.init_kv_cache(batch, hkv, hd, max_len, dtype)
 
 

@@ -19,6 +19,7 @@ class Model(NamedTuple):
     init: Any          # (key) -> (params, axes)
     apply: Any         # (params, batch, mode, cache, impl) -> (logits, cache, aux)
     init_cache: Any    # (params, batch_size, max_len) -> cache
+    init_slot_cache: Any = None  # (params, max_len) -> batch-1 cache (serving)
 
 
 def build_model(cfg) -> Model:
@@ -40,6 +41,8 @@ def build_model(cfg) -> Model:
         def init_cache(params, batch_size, max_len):
             return whp.whisper_init_cache(params, cfg, batch_size, max_len)
 
+        # no init_slot_cache: ServeEngine rejects audio models (the slot
+        # machinery doesn't carry cross-attention/encoder state)
         return Model(cfg, init, apply, init_cache)
 
     def init(key):
@@ -54,7 +57,10 @@ def build_model(cfg) -> Model:
     def init_cache(params, batch_size, max_len):
         return tfm.lm_init_cache(params, cfg, batch_size, max_len)
 
-    return Model(cfg, init, apply, init_cache)
+    def init_slot_cache(params, max_len):
+        return tfm.lm_init_slot_cache(params, cfg, max_len)
+
+    return Model(cfg, init, apply, init_cache, init_slot_cache)
 
 
 def input_specs(cfg, shape, *, for_train: bool | None = None) -> dict:

@@ -260,3 +260,14 @@ def lm_init_cache(params, cfg, batch: int, max_len: int):
         out["tail"] = {f"block{bi}": one_block(mk)
                        for bi, (mk, _) in enumerate(pattern[:rem])}
     return out
+
+
+def lm_init_slot_cache(params, cfg, max_len: int):
+    """Decode cache for one serve slot: batch 1, per-slot `pos` scalars.
+
+    The serve engine stacks these over a leading slot axis
+    (core.decode.broadcast_slot_caches) so every slot advances its own
+    position — the batched cache from lm_init_cache shares one `pos` and
+    cannot represent slots at different depths.
+    """
+    return lm_init_cache(params, cfg, 1, max_len)

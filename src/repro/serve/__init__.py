@@ -1,3 +1,5 @@
-from repro.serve.engine import ServeEngine, generate, make_serve_fns
+from repro.serve.engine import (GenerationResult, Request, RequestOutput,
+                                ServeEngine, generate, make_serve_fns)
 
-__all__ = ["ServeEngine", "generate", "make_serve_fns"]
+__all__ = ["GenerationResult", "Request", "RequestOutput", "ServeEngine",
+           "generate", "make_serve_fns"]

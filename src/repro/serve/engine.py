@@ -1,20 +1,37 @@
-"""Batched serving engine.
+"""Continuous-batching serve engine over the O(1) polysketch decode state.
 
 The paper's inference story: polysketch attention's decode state is O(1) in
-context length (r^2 x (h+1) per kv-head + one partial block), so a 500k
-context costs the same per token as a 1k context, and batch slots never
-fragment HBM the way a paged KV cache does.
+context length (r^2 x (h+1) per kv-head + one partial block), so a 32k
+context costs the same per decode step as a 1k context and slot admission
+never depends on prompt length — no paging, no eviction, no per-request
+O(n) cache.
 
-serve_prefill / serve_step are the functions the dry-run lowers for
-prefill_* / decode_* / long_* shape cells.
+The engine keeps a fixed number of decode *slots*. Every slot owns an
+independent cache slice (the model's decode-cache pytree at batch 1,
+stacked over a leading slot axis so each slot carries its own ``pos``).
+Admission prefills ONE request at its native prompt length (no padding
+into attention) and scatters the resulting cache into the free slot with a
+jitted `dynamic_update_index_in_dim`; live slots are never touched. Decode
+runs all slots lockstep through one jitted, slot-vmapped model call; free
+slots decode along on stale state (their outputs are never read, and
+admission rewrites the whole slot slice — cache, token, pos) until the
+queue refills them.
+
+serve_prefill / serve_step (`make_serve_fns`) remain the single-shot
+functions the dry-run lowers for prefill_* / decode_* / long_* shape cells.
 """
 from __future__ import annotations
 
-from functools import partial
+import time
+from collections import deque
+from dataclasses import dataclass, field
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decode import broadcast_slot_caches, slot_scatter
 
 
 def make_serve_fns(model, cfg):
@@ -76,36 +93,242 @@ def generate(model, cfg, params, prompt: jax.Array, steps: int, *,
     return GenerationResult(tokens=toks.T, logits_last=last)
 
 
-class ServeEngine:
-    """Minimal continuous-batching engine over fixed slots.
+@dataclass
+class Request:
+    rid: int
+    prompt: jax.Array            # (S,) int32
+    max_new_tokens: int
+    eos_id: int | None = None
+    submit_time: float = 0.0
 
-    Requests are (prompt, n_steps); slots run lockstep decode; finished
-    slots are refilled from the queue. With polysketch caches, slot state is
-    context-length independent, so admission never depends on prompt length
-    (the scheduling headache that pages/evictions solve for softmax KV).
+
+@dataclass
+class RequestOutput:
+    rid: int
+    tokens: np.ndarray           # (n_generated,) int32, includes EOS if hit
+    prompt_len: int
+    finish_reason: str           # "eos" | "length"
+    ttft_s: float = 0.0          # submit -> first token (prefill argmax)
+    latency_s: float = 0.0       # submit -> retirement
+    decode_steps: int = 0
+
+
+@dataclass
+class _Slot:
+    request: Request | None = None
+    emitted: list[int] = field(default_factory=list)
+    ttft_s: float = 0.0
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class ServeEngine:
+    """Continuous-batching engine over fixed decode slots.
+
+    Requests are admitted into free slots one at a time: each prefill runs
+    at the request's own prompt length (polysketch prefill folds complete
+    blocks into the r^2 x (h+1) prefix state), and the resulting batch-1
+    cache is scattered into the slot axis without disturbing live slots.
+    All slots then decode lockstep through one vmapped jitted step; each
+    slot stops independently on EOS or its max-new-tokens budget.
+
+    Greedy decoding only (matches `generate(temperature=0)` per request).
     """
 
     def __init__(self, model, cfg, params, *, slots: int = 4,
                  max_len: int = 4096):
+        if cfg.family == "audio":
+            raise NotImplementedError("ServeEngine serves LM families only")
+        if slots < 1:
+            raise ValueError("need at least one decode slot")
         self.model, self.cfg, self.params = model, cfg, params
         self.slots = slots
         self.max_len = max_len
-        self.queue: list[tuple[jax.Array, int]] = []
-        self.results: list[jax.Array] = []
+        self.queue: deque[Request] = deque()
+        self.finished: list[RequestOutput] = []
+        self._next_rid = 0
+        self._slots = [_Slot() for _ in range(slots)]
 
-    def submit(self, prompt, n_steps: int):
-        self.queue.append((prompt, n_steps))
+        init_slot = (model.init_slot_cache or
+                     (lambda p, m: model.init_cache(p, 1, m)))
 
-    def run(self):
-        while self.queue:
-            batch = [self.queue.pop(0) for _ in range(min(self.slots, len(self.queue)))]
-            maxs = max(p.shape[-1] for p, _ in batch)
-            prompts = jnp.stack([
-                jnp.pad(p, (maxs - p.shape[-1], 0), constant_values=0)
-                for p, _ in batch])
-            steps = max(n for _, n in batch)
-            out = generate(self.model, self.cfg, self.params, prompts, steps,
-                           max_len=self.max_len)
-            for i, (_, n) in enumerate(batch):
-                self.results.append(out.tokens[i, :n])
-        return self.results
+        # Device state: slot-stacked cache pytree (leading slot axis over
+        # batch-1 caches; per-slot `pos` scalars become a (slots,) vector),
+        # the next token to feed each slot, and each slot's context depth.
+        self._slot_caches = broadcast_slot_caches(
+            init_slot(params, max_len), slots)
+        self._slot_tokens = jnp.zeros((slots, 1, 1), jnp.int32)
+        self._slot_pos = jnp.zeros((slots,), jnp.int32)
+
+        def prefill_one(params, tokens):
+            # tokens: (1, S) at the request's own length — no padding enters
+            # attention. Retraced per distinct prompt length.
+            cache = init_slot(params, self.max_len)
+            logits, cache, _ = model.apply(params, {"tokens": tokens},
+                                           mode="prefill", cache=cache)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return tok, cache
+
+        def decode_one(params, tok, pos, cache):
+            logits, cache, _ = model.apply(params, {"tokens": tok},
+                                           mode="decode", cache=cache,
+                                           positions=pos[None])
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+        # The slot-stacked cache is donated on both hot paths (decode tick,
+        # admission scatter) so XLA updates it in place instead of copying
+        # the full cache pytree every generated token; callers must treat
+        # the cache they pass in as consumed.
+        self._prefill = jax.jit(prefill_one)
+        self._decode = jax.jit(jax.vmap(decode_one, in_axes=(None, 0, 0, 0)),
+                               donate_argnums=(3,))
+        self._scatter = jax.jit(slot_scatter, donate_argnums=(0,))
+
+        # accounting
+        self.total_prefill_s = 0.0
+        self.total_decode_s = 0.0
+        self.decode_steps = 0
+        self.prefills = 0
+
+    # ------------------------------------------------------------------
+    # submission / scheduling
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: int | None = None) -> int:
+        """Enqueue a request; returns its id. prompt: (S,) or (1, S) int32."""
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(-1)
+        if prompt.shape[0] < 1:
+            raise ValueError("prompt must contain at least one token")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt.shape[0] + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt({prompt.shape[0]}) + max_new({max_new_tokens}) "
+                f"exceeds engine max_len={self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new_tokens, eos_id,
+                                  time.perf_counter()))
+        return rid
+
+    @property
+    def n_active(self) -> int:
+        return sum(not s.free for s in self._slots)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    def _retire(self, si: int, reason: str) -> RequestOutput:
+        slot = self._slots[si]
+        req = slot.request
+        now = time.perf_counter()
+        out = RequestOutput(
+            rid=req.rid, tokens=np.asarray(slot.emitted, np.int32),
+            prompt_len=int(req.prompt.shape[0]), finish_reason=reason,
+            ttft_s=slot.ttft_s, latency_s=now - req.submit_time,
+            decode_steps=len(slot.emitted) - 1)
+        slot.request = None
+        slot.emitted = []
+        self.finished.append(out)
+        return out
+
+    def _check_finished(self, si: int) -> RequestOutput | None:
+        slot = self._slots[si]
+        req = slot.request
+        if req.eos_id is not None and slot.emitted[-1] == req.eos_id:
+            return self._retire(si, "eos")
+        if len(slot.emitted) >= req.max_new_tokens:
+            return self._retire(si, "length")
+        return None
+
+    def _admit(self) -> list[RequestOutput]:
+        """Fill free slots from the queue (FIFO). Prefill is per-request at
+        its native length; only the target slot's cache slice is written."""
+        done = []
+        for si, slot in enumerate(self._slots):
+            if not slot.free:
+                continue
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            t0 = time.perf_counter()
+            tok, cache = self._prefill(self.params, req.prompt[None])
+            tok = jax.block_until_ready(tok)
+            self.total_prefill_s += time.perf_counter() - t0
+            self.prefills += 1
+
+            s0 = req.prompt.shape[0]
+            self._slot_caches = self._scatter(
+                self._slot_caches, cache, jnp.asarray(si, jnp.int32))
+            self._slot_tokens = self._slot_tokens.at[si, 0, 0].set(tok[0])
+            self._slot_pos = self._slot_pos.at[si].set(s0)
+
+            slot.request = req
+            slot.emitted = [int(tok[0])]
+            slot.ttft_s = time.perf_counter() - req.submit_time
+            fin = self._check_finished(si)
+            if fin is not None:
+                done.append(fin)
+        return done
+
+    def step(self) -> list[RequestOutput]:
+        """One scheduler tick: admit into free slots, then decode every slot
+        once (lockstep). Returns requests that finished this tick."""
+        done = self._admit()
+        if self.n_active == 0:
+            return done
+        t0 = time.perf_counter()
+        toks, self._slot_caches = self._decode(
+            self.params, self._slot_tokens, self._slot_pos, self._slot_caches)
+        host_toks = np.asarray(toks)          # (slots, 1) — syncs the step
+        self.total_decode_s += time.perf_counter() - t0
+        self.decode_steps += 1
+        self._slot_tokens = toks[:, :, None]
+        self._slot_pos = self._slot_pos + 1   # inactive slots: harmless
+        for si, slot in enumerate(self._slots):
+            if slot.free:
+                continue
+            slot.emitted.append(int(host_toks[si, 0]))
+            fin = self._check_finished(si)
+            if fin is not None:
+                done.append(fin)
+        return done
+
+    def run(self) -> list[RequestOutput]:
+        """Drain the queue and all active slots. Returns outputs in
+        completion order (FIFO admission => arrival order for equal-length
+        generations)."""
+        out = []
+        while self.busy:
+            out.extend(self.step())
+        return out
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+
+    def reset_stats(self):
+        """Zero the accounting (e.g. after a compile warm-up run)."""
+        self.finished = []
+        self.total_prefill_s = self.total_decode_s = 0.0
+        self.decode_steps = self.prefills = 0
+
+    def stats(self) -> dict:
+        gen_tokens = sum(len(o.tokens) for o in self.finished)
+        # first token of every request comes from the prefill argmax, so
+        # decode throughput counts only decode-step-produced tokens
+        decode_tokens = sum(o.decode_steps for o in self.finished)
+        return {
+            "requests": len(self.finished),
+            "generated_tokens": gen_tokens,
+            "prefills": self.prefills,
+            "decode_steps": self.decode_steps,
+            "prefill_s": self.total_prefill_s,
+            "decode_s": self.total_decode_s,
+            "decode_tok_per_s": (decode_tokens / self.total_decode_s
+                                 if self.total_decode_s else 0.0),
+        }

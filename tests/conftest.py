@@ -1,0 +1,15 @@
+"""Shared pytest setup: make `src/` importable without PYTHONPATH=src and
+register the custom markers used by the suite."""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (multi-process / simulated-mesh); "
+        "deselect with -m 'not slow'")

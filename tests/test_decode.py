@@ -1,0 +1,119 @@
+"""core/decode.py block-boundary edge cases: prefill at s % blk == 0,
+s < blk, and GQA all agree with the training block algorithm; a fold at
+exactly fill == blk - 1 matches the training path; sketch_param_count
+matches the real parameter tree; slot-stacked cache helpers round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (block_causal_linear_attention, init_polysketch_cache,
+                        init_sketch, polysketch_decode_step,
+                        polysketch_prefill, qk_layernorm,
+                        sketch_param_count)
+from repro.core.decode import (broadcast_slot_caches, slot_gather,
+                               slot_scatter)
+from repro.core.sketches import sketch_half
+from repro.utils import param_count
+
+BLK = 16
+
+
+def _mh_setup(seed=0, bsz=2, hq=2, hkv=2, n=48, h=16, r=8, p=4):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = qk_layernorm(jax.random.normal(ks[0], (bsz, hq, n, h)), None, None)
+    k = qk_layernorm(jax.random.normal(ks[1], (bsz, hkv, n, h)), None, None)
+    v = jax.random.normal(ks[2], (bsz, hkv, n, h))
+    sp, _ = init_sketch(ks[3], h, r, p, learned=False)
+    scale = 1.0 / h
+    rt = np.sqrt(scale)
+    qm = sketch_half(sp, q * rt, p, False)
+    km = sketch_half(sp, k * rt, p, False)
+    return q, k, v, qm, km, scale
+
+
+def _train_ref(qm, km, v, q, k, scale):
+    """Full-sequence training block algorithm with GQA heads repeated."""
+    g = q.shape[1] // k.shape[1]
+    rep = lambda x: jnp.repeat(x, g, axis=1) if g > 1 else x
+    return np.asarray(block_causal_linear_attention(
+        qm, rep(km), rep(v), q, rep(k), degree=4, scale=scale,
+        block_size=BLK))
+
+
+@pytest.mark.parametrize("hq,hkv", [(2, 2), (4, 2), (4, 1)])
+@pytest.mark.parametrize("s0", [7,            # s < blk: all-partial buffer
+                                BLK - 1,      # next decode step folds
+                                BLK,          # s % blk == 0: empty buffer
+                                2 * BLK])     # multi-block, empty buffer
+def test_prefill_boundary_then_decode_matches_train(s0, hq, hkv):
+    """prefill(s0) output == training[:s0] and the cache it leaves behind
+    continues decoding to the exact training outputs — across both block
+    boundaries following s0 (including the fold at fill == blk - 1)."""
+    n, h, r = 48, 16, 8
+    q, k, v, qm, km, scale = _mh_setup(seed=s0 + hq, hq=hq, hkv=hkv, n=n,
+                                       h=h, r=r)
+    full = _train_ref(qm, km, v, q, k, scale)
+
+    cache = init_polysketch_cache(q.shape[0], hkv, h, r, BLK)
+    out0, cache = polysketch_prefill(
+        cache, qm[:, :, :s0], km[:, :, :s0], q[:, :, :s0], k[:, :, :s0],
+        v[:, :, :s0], degree=4, scale=scale)
+    np.testing.assert_allclose(np.asarray(out0), full[:, :, :s0], atol=1e-4)
+    assert int(cache.pos) == s0
+
+    outs = []
+    for t in range(s0, n):
+        o, cache = polysketch_decode_step(
+            cache, qm[:, :, t], km[:, :, t], q[:, :, t], k[:, :, t],
+            v[:, :, t], degree=4, scale=scale)
+        outs.append(np.asarray(o))
+    np.testing.assert_allclose(np.stack(outs, axis=2),
+                               full[:, :, s0:], atol=1e-4)
+    assert int(cache.pos) == n
+
+
+def test_fold_at_block_edge_updates_prefix_state():
+    """The decode step at fill == blk - 1 must fold the completed block
+    into z; the next step then attends to it only through the sketch."""
+    n = 2 * BLK
+    q, k, v, qm, km, scale = _mh_setup(seed=9, n=n)
+    cache = init_polysketch_cache(2, 2, 16, 8, BLK)
+    _, cache = polysketch_prefill(
+        cache, qm[:, :, :BLK - 1], km[:, :, :BLK - 1], q[:, :, :BLK - 1],
+        k[:, :, :BLK - 1], v[:, :, :BLK - 1], degree=4, scale=scale)
+    assert float(jnp.abs(cache.z).max()) == 0.0  # nothing folded yet
+    _, cache = polysketch_decode_step(
+        cache, qm[:, :, BLK - 1], km[:, :, BLK - 1], q[:, :, BLK - 1],
+        k[:, :, BLK - 1], v[:, :, BLK - 1], degree=4, scale=scale)
+    assert float(jnp.abs(cache.z).max()) > 0.0   # block folded exactly here
+
+
+@pytest.mark.parametrize("degree", [2, 4, 8])
+@pytest.mark.parametrize("learned", [False, True])
+def test_sketch_param_count_matches_init(degree, learned):
+    h, r = 16, 8
+    params, _ = init_sketch(jax.random.PRNGKey(0), h, r, degree, learned)
+    assert sketch_param_count(h, r, degree, learned) == param_count(params)
+
+
+def test_slot_cache_helpers_roundtrip():
+    """broadcast -> scatter -> gather preserves per-slot cache contents,
+    including the per-slot scalar pos."""
+    cache = init_polysketch_cache(1, 2, 16, 8, BLK)
+    slot_caches = broadcast_slot_caches(cache, 3)
+    assert slot_caches.pos.shape == (3,)
+    assert slot_caches.kbuf.shape == (3, 1, 2, BLK, 16)
+
+    filled = cache._replace(
+        kbuf=jnp.ones_like(cache.kbuf), pos=jnp.asarray(5, jnp.int32))
+    slot_caches = slot_scatter(slot_caches, filled, jnp.asarray(1, jnp.int32))
+    # target slot holds the new state ...
+    got = slot_gather(slot_caches, jnp.asarray(1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got.kbuf),
+                                  np.asarray(filled.kbuf))
+    assert int(got.pos) == 5
+    # ... and neighbours were untouched
+    other = slot_gather(slot_caches, jnp.asarray(0, jnp.int32))
+    assert float(jnp.abs(other.kbuf).max()) == 0.0
+    assert int(other.pos) == 0

@@ -1,0 +1,142 @@
+"""Continuous-batching engine invariants: per-request parity with
+single-request `generate`, no cross-slot contamination for mixed prompt
+lengths, independent per-slot EOS stop, and FIFO queue draining with more
+requests than slots."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeEngine, generate
+
+
+def _setup(seed=0, **overrides):
+    cfg = get_config("gpt2s-polysketch", smoke=True)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    return model, cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.integers(0, cfg.vocab_size, n), jnp.int32)
+            for n in lens]
+
+
+def _ref_tokens(model, cfg, params, prompt, steps):
+    return np.asarray(generate(model, cfg, params, prompt[None], steps).tokens[0])
+
+
+def test_engine_matches_generate_per_request():
+    """Each engine output bit-matches the single-request generate() path."""
+    model, cfg, params = _setup()
+    lens, steps = [5, 12, 23], [6, 8, 4]
+    prompts = _prompts(cfg, lens)
+    eng = ServeEngine(model, cfg, params, slots=3, max_len=64)
+    for p, n in zip(prompts, steps):
+        eng.submit(p, n)
+    outs = {o.rid: o for o in eng.run()}
+    assert len(outs) == 3
+    for rid, (p, n) in enumerate(zip(prompts, steps)):
+        np.testing.assert_array_equal(
+            outs[rid].tokens, _ref_tokens(model, cfg, params, p, n))
+        assert outs[rid].finish_reason == "length"
+        assert outs[rid].prompt_len == p.shape[0]
+
+
+def test_mixed_lengths_no_cross_slot_contamination():
+    """Prompt lengths straddling the lt block size (16) share one decode
+    batch; every slot must still match its solo run exactly."""
+    model, cfg, params = _setup(seed=3)
+    lens = [3, 16, 17, 40]  # < blk, == blk, blk+1, multi-block
+    prompts = _prompts(cfg, lens, seed=3)
+    eng = ServeEngine(model, cfg, params, slots=4, max_len=64)
+    for p in prompts:
+        eng.submit(p, 8)
+    outs = {o.rid: o for o in eng.run()}
+    for rid, p in enumerate(prompts):
+        np.testing.assert_array_equal(
+            outs[rid].tokens, _ref_tokens(model, cfg, params, p, 8))
+
+
+def test_eos_stops_slot_early_while_others_continue():
+    model, cfg, params = _setup(seed=1)
+    prompts = _prompts(cfg, [8, 9], seed=1)
+    ref_a = _ref_tokens(model, cfg, params, prompts[0], 10)
+    ref_b = _ref_tokens(model, cfg, params, prompts[1], 10)
+    eos = int(ref_a[3])  # greedy path hits this at step 3
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=32)
+    eng.submit(prompts[0], 10, eos_id=eos)
+    eng.submit(prompts[1], 10)
+    outs = {o.rid: o for o in eng.run()}
+    assert outs[0].finish_reason == "eos"
+    assert outs[0].tokens[-1] == eos
+    assert len(outs[0].tokens) <= 4  # stopped at (or before) the known hit
+    np.testing.assert_array_equal(outs[0].tokens,
+                                  ref_a[:len(outs[0].tokens)])
+    # the other slot was untouched by the early retirement
+    assert outs[1].finish_reason == "length"
+    np.testing.assert_array_equal(outs[1].tokens, ref_b)
+
+
+def test_queue_longer_than_slots_drains_in_arrival_order():
+    model, cfg, params = _setup(seed=2)
+    lens = [7, 20, 15, 31, 9, 12, 25]
+    prompts = _prompts(cfg, lens, seed=2)
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=64)
+    rids = [eng.submit(p, 5) for p in prompts]
+    outs = eng.run()
+    # complete drain, FIFO completion (equal generation lengths)
+    assert [o.rid for o in outs] == rids
+    assert not eng.busy and eng.n_active == 0
+    for o in outs:
+        np.testing.assert_array_equal(
+            o.tokens, _ref_tokens(model, cfg, params, prompts[o.rid], 5))
+
+
+@pytest.mark.parametrize("overrides", [dict(attention="softmax"),
+                                       dict(n_kv_heads=2)])
+def test_engine_other_cache_paths(overrides):
+    """The slot machinery is cache-type agnostic: softmax KV and GQA
+    polysketch slots behave identically to their solo runs."""
+    model, cfg, params = _setup(seed=4, **overrides)
+    prompts = _prompts(cfg, [6, 19], seed=4)
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=48)
+    for p in prompts:
+        eng.submit(p, 6)
+    outs = {o.rid: o for o in eng.run()}
+    for rid, p in enumerate(prompts):
+        np.testing.assert_array_equal(
+            outs[rid].tokens, _ref_tokens(model, cfg, params, p, 6))
+
+
+def test_submit_rejects_invalid_requests():
+    model, cfg, params = _setup()
+    with pytest.raises(ValueError):
+        ServeEngine(model, cfg, params, slots=0)  # would spin forever
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(jnp.zeros((12,), jnp.int32), 8)   # overflows max_len
+    with pytest.raises(ValueError):
+        eng.submit(jnp.zeros((0,), jnp.int32), 4)    # empty prompt
+    with pytest.raises(ValueError):
+        eng.submit(jnp.zeros((4,), jnp.int32), 0)    # no token budget
+
+
+def test_engine_accounting():
+    model, cfg, params = _setup()
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=32)
+    for p in _prompts(cfg, [4, 10]):
+        eng.submit(p, 5)
+    outs = eng.run()
+    st = eng.stats()
+    assert st["requests"] == 2 and st["prefills"] == 2
+    assert st["generated_tokens"] == sum(len(o.tokens) for o in outs) == 10
+    assert st["decode_s"] > 0 and st["decode_tok_per_s"] > 0
+    for o in outs:
+        assert 0 < o.ttft_s <= o.latency_s
+        assert o.decode_steps == len(o.tokens) - 1

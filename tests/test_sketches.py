@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import init_sketch, qk_layernorm
 from repro.core.sketches import sketch_half
@@ -30,8 +29,11 @@ def test_nonnegativity(p, learned):
     assert (approx >= 0).all()
 
 
-@given(st.integers(0, 10_000))
-@settings(max_examples=20, deadline=None)
+# Seeded stand-in for the former hypothesis property test: 20 fixed seeds
+# spanning the old strategy's [0, 10_000] range.
+@pytest.mark.parametrize("seed", [0, 1, 7, 42, 137, 271, 577, 828, 1009,
+                                  1618, 2718, 3141, 4669, 5040, 6174, 7919,
+                                  8128, 9001, 9973, 10_000])
 def test_nonnegativity_property(seed):
     _, _, qm, km = _sketch_pair(seed, 8, 8, 4)
     assert ((qm @ km.T) ** 2 >= -1e-9).all()
