@@ -60,5 +60,12 @@ def train_steps(cfg, *, steps, batch, seq, lr=3e-3, seed=0, sample_fn=None,
     return state, losses, sps
 
 
+# every emitted cell is also recorded here so harnesses (benchmarks.run)
+# can persist machine-readable results alongside the CSV stream
+RESULTS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str):
+    RESULTS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

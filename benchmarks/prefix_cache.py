@@ -1,0 +1,110 @@
+"""Prefix-reuse snapshot cache: TTFT and prefill cost, off / cold / warm.
+
+The polysketch decode state is O(1) in context length, so a snapshot of the
+state after a block-aligned prefix is constant-size and a warm cache turns a
+shared-prompt prefill into (restore + suffix-length prefill). Cells, per
+shared-prefix length P (suffix fixed at 32 tokens, smoke model):
+
+  prefix_cache/off/pfx{P}    TTFT with no cache (full cold prefill)
+  prefix_cache/cold/pfx{P}   TTFT of the first request with the cache on
+                             (miss: full prefill + snapshot admission)
+  prefix_cache/warm/pfx{P}   median TTFT of steady-state hit requests
+                             (restore at P + prefill the 32-token suffix);
+                             derived reports speedup vs cold
+  prefix_cache/stats         hit/miss/bytes accounting of the warm run
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import PrefixCache, ServeEngine
+
+SUFFIX, GEN, WARM_REQS = 32, 2, 5
+
+
+def _build(seed=0):
+    cfg = get_config("gpt2s-polysketch", smoke=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    return model, cfg, params
+
+
+def _prompts(cfg, prefix_len, n, seed):
+    """n prompts sharing one random prefix, each with a distinct suffix."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, prefix_len)
+    return [jnp.asarray(np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, SUFFIX)]), jnp.int32)
+            for _ in range(n)]
+
+
+def _serve_ttfts(engine, prompts):
+    """Submit one at a time (TTFT isolated from queueing) and drain."""
+    ttfts = []
+    for p in prompts:
+        engine.submit(p, GEN)
+        outs = engine.run()
+        ttfts.extend(o.ttft_s for o in outs)
+    return ttfts
+
+
+def _bench_prefix(model, cfg, params, prefix_len, seed):
+    max_len = prefix_len + SUFFIX + GEN + 1
+
+    # -- cache off: every request pays the full prefill -------------------
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=max_len)
+    _serve_ttfts(eng, _prompts(cfg, prefix_len, 2, seed + 91))  # compile
+    eng.reset_stats()
+    off = float(np.median(_serve_ttfts(
+        eng, _prompts(cfg, prefix_len, 3, seed))))
+    off_prefill_s = eng.stats()["prefill_s"] / 3
+
+    # -- cache on ---------------------------------------------------------
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=max_len,
+                      prefix_cache=PrefixCache(max_bytes=1 << 26))
+    # compile warm-up on a *different* shared prefix: exercises the miss,
+    # promote-split and hit prefill shapes so timed cells measure the
+    # serving path, not XLA traces
+    _serve_ttfts(eng, _prompts(cfg, prefix_len, 4, seed + 57))
+    eng.reset_stats()
+
+    prompts = _prompts(cfg, prefix_len, 2 + WARM_REQS, seed)
+    cold = _serve_ttfts(eng, prompts[:1])[0]       # miss: full prefill
+    _serve_ttfts(eng, prompts[1:2])                # promote: splits + inserts
+    pre0 = eng.stats()["prefill_s"]
+    warm_ttfts = _serve_ttfts(eng, prompts[2:])    # steady-state hits
+    warm = float(np.median(warm_ttfts))
+    warm_prefill_s = (eng.stats()["prefill_s"] - pre0) / WARM_REQS
+    return off, off_prefill_s, cold, warm, warm_prefill_s, eng.stats()
+
+
+def main(fast: bool = True):
+    model, cfg, params = _build()
+    plens = [256, 2048] if fast else [2048, 8192, 32768]
+    stats = None
+    for plen in plens:
+        off, off_pre, cold, warm, warm_pre, st = _bench_prefix(
+            model, cfg, params, plen, seed=plen)
+        stats = st["prefix_cache"]
+        emit(f"prefix_cache/off/pfx{plen}", off * 1e6,
+             f"ttft_ms={off * 1e3:.1f};prefill_ms={off_pre * 1e3:.1f}")
+        emit(f"prefix_cache/cold/pfx{plen}", cold * 1e6,
+             f"ttft_ms={cold * 1e3:.1f}")
+        emit(f"prefix_cache/warm/pfx{plen}", warm * 1e6,
+             f"ttft_ms={warm * 1e3:.1f};prefill_ms={warm_pre * 1e3:.1f};"
+             f"speedup_vs_cold={cold / max(warm, 1e-9):.1f}x;"
+             f"speedup_vs_off={off / max(warm, 1e-9):.1f}x")
+    emit("prefix_cache/stats", 0.0,
+         f"hits={stats['hits']};misses={stats['misses']};"
+         f"hit_tokens={stats['hit_tokens']};bytes={stats['bytes']};"
+         f"evictions={stats['evictions']}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -150,39 +150,48 @@ def poly_kv_decode_step(cache: KVCache, q, k, v, *, degree: int, scale: float):
 
 def polysketch_prefill(cache: PolysketchCache, qm, km, q, k, v, *,
                        degree: int, scale: float, local_exact: bool = True):
-    """Fill a PolysketchCache from a full prompt (B, H*, S, .) in one shot.
+    """Fill a PolysketchCache from a prompt segment (B, H*, S, .) in one shot.
 
     Folds all complete blocks into z; the remainder lands in the buffer.
     Returns (outputs (B, Hq, S, h), cache) where outputs match the training
     block algorithm exactly.
+
+    Resume contract: `cache` may carry a nonzero *block-aligned* state
+    (pos % blk == 0, empty buffers) — e.g. a prefix-cache snapshot — and
+    the segment's tokens then attend through cache.z as if the folded
+    tokens had been part of this call. Both z and the outputs accumulate
+    block-by-block (the scan carry), so a prefill resumed from a snapshot
+    is bit-identical to a cold prefill of the full concatenated prompt.
     """
     from repro.core.linear_attention import block_causal_linear_attention
     bsz, hkv, s, hd = k.shape
     hq = q.shape[1]
     blk = cache.kbuf.shape[2]
     g = hq // hkv
-    km_r = jnp.repeat(km, g, axis=1) if km.shape[1] != hq else km
-    k_r = jnp.repeat(k, g, axis=1)
-    v_r = jnp.repeat(v, g, axis=1)
-    if s <= blk:
-        out = block_causal_linear_attention(
-            qm, km_r, v_r, q, k_r, degree=degree, scale=scale,
-            block_size=s, local_exact=local_exact)
-    else:
-        # Zero-pad (post-sketch, so padded keys contribute zero weight) to a
-        # block multiple; padded query rows are sliced away.
-        from repro.utils import pad_to_multiple
-        args = [pad_to_multiple(x, blk, axis=2)[0]
-                for x in (qm, km_r, v_r, q, k_r)]
-        out = block_causal_linear_attention(
-            args[0], args[1], args[2], args[3], args[4], degree=degree,
-            scale=scale, block_size=blk, local_exact=local_exact)[:, :, :s]
-    n_full = (s // blk) * blk
+    rep = lambda x: jnp.repeat(x, g, axis=1) if g > 1 else x
+    km_r, k_r, v_r = rep(km), rep(k), rep(v)
     f32 = jnp.float32
-    kf = self_kron(km[:, :, :n_full].astype(f32))
-    ones = jnp.ones((bsz, hkv, n_full, 1), f32)
-    vv = jnp.concatenate([v[:, :, :n_full].astype(f32), ones], axis=-1)
-    z = cache.z + jnp.einsum("bnsf,bnsd->bnfd", kf, vv)
+    n_full = (s // blk) * blk
+    z = cache.z.astype(f32)
+    outs = []
+    if n_full:
+        out_f, z_r = block_causal_linear_attention(
+            qm[:, :, :n_full], km_r[:, :, :n_full], v_r[:, :, :n_full],
+            q[:, :, :n_full], k_r[:, :, :n_full], degree=degree, scale=scale,
+            block_size=blk, local_exact=local_exact, z0=rep(z),
+            return_state=True)
+        outs.append(out_f)
+        # all g query-head copies of a kv head folded identical blocks from
+        # an identical z0, so any copy is the per-kv-head state
+        z = z_r.reshape(bsz, hkv, g, *z_r.shape[2:])[:, :, 0]
+    if s > n_full:
+        # partial tail block: attends locally + through z, but is NOT folded
+        # (it lives in the buffer until decode completes the block)
+        outs.append(block_causal_linear_attention(
+            qm[:, :, n_full:], km_r[:, :, n_full:], v_r[:, :, n_full:],
+            q[:, :, n_full:], k_r[:, :, n_full:], degree=degree, scale=scale,
+            block_size=s - n_full, local_exact=local_exact, z0=rep(z)))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
     kbuf = jax.lax.dynamic_update_slice_in_dim(
         cache.kbuf, k[:, :, n_full:].astype(cache.kbuf.dtype), 0, axis=2)
     vbuf = jax.lax.dynamic_update_slice_in_dim(

@@ -37,13 +37,21 @@ def block_causal_linear_attention(qm, km, v, q=None, k=None, *,
                                   scale: float | None = None,
                                   block_size: int = 256,
                                   local_exact: bool = True,
-                                  unroll: bool = False):
+                                  unroll: bool = False,
+                                  z0=None,
+                                  return_state: bool = False):
     """Causal polysketch attention via the paper's block algorithm (S3.1).
 
     qm, km: (..., S, r) degree-p/2 sketches (already include the scale).
     v:      (..., S, h)
     q, k:   (..., S, h) raw (post-LN) vectors; required iff local_exact.
-    Returns (..., S, h).
+    z0:     optional (..., r^2, h+1) initial prefix state Z_0 — every token
+            attends through it in addition to its causal prefix, as if the
+            folded tokens preceded the sequence. Defaults to zeros.
+    Returns (..., S, h), or (out, z_final) when return_state — z_final is
+    the scan carry after folding ALL blocks (the state a resumed call needs
+    as its z0). Because the carry accumulates block-by-block, resuming from
+    z_final is bit-identical to running the blocks in one call.
 
     Implemented as the paper specifies: a sequential prefix over the t = S/b
     blocks (lax.scan), carrying Z_l = sum_{j<l} phi'(K_j)^T [V_j, 1]. Only
@@ -101,23 +109,27 @@ def block_causal_linear_attention(qm, km, v, q=None, k=None, *,
                            preferred_element_type=f32)
         return z, acc
 
-    z0 = jnp.zeros((*lead, r * r, h + 1), f32)
+    if z0 is None:
+        z_init = jnp.zeros((*lead, r * r, h + 1), f32)
+    else:
+        z_init = jnp.broadcast_to(z0.astype(f32), (*lead, r * r, h + 1))
     t = s // b
     move = lambda x: jnp.moveaxis(x, -3, 0)                # t to front for scan
     xs = tuple(move(x) for x in (qm_b, km_b, vv_b, q_b, k_b))
     if unroll:
         accs = []
-        z = z0
+        z_final = z_init
         for i in range(t):
-            z, acc = step(z, tuple(x[i] for x in xs))
+            z_final, acc = step(z_final, tuple(x[i] for x in xs))
             accs.append(acc)
         acc = jnp.stack(accs, 0)
     else:
-        _, acc = jax.lax.scan(step, z0, xs)
+        z_final, acc = jax.lax.scan(step, z_init, xs)
     acc = jnp.moveaxis(acc, 0, -3)                         # (..., t, b, h+1)
     num, den = acc[..., :h], acc[..., h]
     out = num / (1.0 + den)[..., None]
-    return out.reshape(*lead, s, h).astype(v.dtype)
+    out = out.reshape(*lead, s, h).astype(v.dtype)
+    return (out, z_final) if return_state else out
 
 
 def noncausal_linear_attention(qm, km, v):

@@ -23,7 +23,9 @@ from repro.core.poly_attention import poly_attention_full
 from repro.kernels import ref as _ref
 from repro.kernels.lt_mult import lt_mult_pallas
 from repro.kernels.poly_flash import poly_flash_pallas
-from repro.kernels.polysketch_causal import polysketch_causal_pallas
+from repro.kernels.polysketch_causal import (factored_to_z,
+                                             polysketch_causal_pallas,
+                                             z_to_factored)
 from repro.utils import pad_to_multiple
 
 DEFAULT_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "xla")
@@ -67,11 +69,20 @@ def _lt_mult_blocked_xla(a, b, c, *, block_size: int):
 
 def polysketch_attention(qm, km, q, k, v, *, degree: int, scale: float,
                          local_exact: bool = True, block_size: int = 256,
-                         impl: str | None = None, unroll: bool = False):
+                         impl: str | None = None, unroll: bool = False,
+                         z0=None, return_state: bool = False):
     """Fused causal polysketch attention.
 
     qm, km: (B, Hq|Hkv, S, r) sketched (pre-scaled) q/k; q: (B, Hq, S, h);
     k, v: (B, Hkv, S, h). Returns (B, Hq, S, h).
+
+    z0: optional (B, Hq|Hkv, r^2, h+1) initial prefix state (kv heads are
+    repeated like km) — tokens attend through it as if the folded prefix
+    preceded the sequence. With return_state, returns (out, z) where z
+    (B, Hq, r^2, h+1) is the state after folding ALL tokens, including a
+    final partial block (padded keys contribute exact zeros); callers that
+    must keep a partial tail un-folded (decode buffers) split the tail off
+    first — see core.decode.polysketch_prefill.
     """
     impl = impl or DEFAULT_IMPL
     hq, hkv = q.shape[-3], k.shape[-3]
@@ -80,6 +91,8 @@ def polysketch_attention(qm, km, q, k, v, *, degree: int, scale: float,
         km = jnp.repeat(km, g, axis=-3) if km.shape[-3] != hq else km
         k = jnp.repeat(k, g, axis=-3)
         v = jnp.repeat(v, g, axis=-3)
+        if z0 is not None and z0.shape[-3] != hq:
+            z0 = jnp.repeat(z0, g, axis=-3)
     n = q.shape[-2]
     blk = min(block_size, n)
     if impl == "xla":
@@ -89,7 +102,11 @@ def polysketch_attention(qm, km, q, k, v, *, degree: int, scale: float,
                                for x in (qm, km, q, k, v))
         out = block_causal_linear_attention(
             qm, km, v, q, k, degree=degree, scale=scale,
-            block_size=blk, local_exact=local_exact, unroll=unroll)
+            block_size=blk, local_exact=local_exact, unroll=unroll,
+            z0=z0, return_state=return_state)
+        if return_state:
+            out, z = out
+            return out[..., :n, :], z
         return out[..., :n, :]
     qm, _ = pad_to_multiple(qm, blk, axis=-2)
     km, _ = pad_to_multiple(km, blk, axis=-2)
@@ -97,10 +114,20 @@ def polysketch_attention(qm, km, q, k, v, *, degree: int, scale: float,
     k, _ = pad_to_multiple(k, blk, axis=-2)
     v, _ = pad_to_multiple(v, blk, axis=-2)
     lead, (qmf, kmf, qf, kf, vf) = _flatten_bh(qm, km, q, k, v)
+    zv0 = zd0 = None
+    if z0 is not None:
+        zv0, zd0 = z_to_factored(z0.astype(jnp.float32))
+        zv0 = zv0.reshape(-1, *zv0.shape[-2:])
+        zd0 = zd0.reshape(-1, *zd0.shape[-2:])
     out = polysketch_causal_pallas(
-        qmf, kmf, qf, kf, vf, degree=degree, scale=scale,
+        qmf, kmf, qf, kf, vf, zv0, zd0, degree=degree, scale=scale,
         local_exact=local_exact, block_size=blk,
-        interpret=(impl == "interpret"))
+        interpret=(impl == "interpret"), return_state=return_state)
+    if return_state:
+        out, zv, zd = out
+        z = factored_to_z(zv.reshape(*lead, *zv.shape[-2:]),
+                          zd.reshape(*lead, *zd.shape[-2:]))
+        return out.reshape(*lead, *out.shape[-2:])[..., :n, :], z
     out = out.reshape(*lead, *out.shape[-2:])
     return out[..., :n, :]
 

@@ -33,14 +33,37 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(qm_ref, km_ref, q_ref, k_ref, v_ref, o_ref, zv_ref, zd_ref, *,
+def z_to_factored(z):
+    """(..., r^2, h+1) combined state -> factored (zv (..., r, r*h), zd (..., r, r)).
+
+    z[..., i*r + j, d] = Zv[..., i, j*h + d] for d < h; z[..., i*r + j, h] = Zd[..., i, j].
+    """
+    *lead, rr, h1 = z.shape
+    r = int(round(rr ** 0.5))
+    h = h1 - 1
+    zf = z.reshape(*lead, r, r, h1)
+    return zf[..., :h].reshape(*lead, r, r * h), zf[..., h]
+
+
+def factored_to_z(zv, zd):
+    """Inverse of z_to_factored."""
+    *lead, r, rh = zv.shape
+    h = rh // r
+    zf = jnp.concatenate([zv.reshape(*lead, r, r, h), zd[..., None]], axis=-1)
+    return zf.reshape(*lead, r * r, h + 1)
+
+
+def _kernel(qm_ref, km_ref, q_ref, k_ref, v_ref, zv0_ref, zd0_ref, o_ref,
+            zv_out_ref, zd_out_ref, zv_ref, zd_ref, *,
             degree: int, scale: float, local_exact: bool):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
     def _():
-        zv_ref[...] = jnp.zeros_like(zv_ref)
-        zd_ref[...] = jnp.zeros_like(zd_ref)
+        # seed the VMEM state from the caller's initial prefix state (zeros
+        # for a cold run, a restored snapshot for a resumed prefill)
+        zv_ref[...] = zv0_ref[0].astype(jnp.float32)
+        zd_ref[...] = zd0_ref[0].astype(jnp.float32)
 
     f32 = jnp.float32
     qm = qm_ref[0].astype(f32)                    # (b, r)
@@ -81,26 +104,46 @@ def _kernel(qm_ref, km_ref, q_ref, k_ref, v_ref, o_ref, zv_ref, zd_ref, *,
     zd_ref[...] += jax.lax.dot_general(km, km, (((0,), (0,)), ((), ())),
                                        preferred_element_type=f32)
 
+    # surface the carried state; the block index is constant in t, so the
+    # write at the final grid step is what lands in HBM — the state after
+    # folding every block, which a resumed call feeds back as zv0/zd0
+    zv_out_ref[0] = zv_ref[...]
+    zd_out_ref[0] = zd_ref[...]
+
 
 @functools.partial(
     jax.jit,
-    static_argnames=("degree", "scale", "local_exact", "block_size", "interpret"))
-def polysketch_causal_pallas(qm, km, q, k, v, *, degree: int, scale: float,
+    static_argnames=("degree", "scale", "local_exact", "block_size",
+                     "interpret", "return_state"))
+def polysketch_causal_pallas(qm, km, q, k, v, zv0=None, zd0=None, *,
+                             degree: int, scale: float,
                              local_exact: bool = True, block_size: int = 256,
-                             interpret: bool = False):
+                             interpret: bool = False,
+                             return_state: bool = False):
     """qm, km: (bh, n, r); q, k, v: (bh, n, h) -> (bh, n, h).
 
     n must be divisible by block_size (pad at the ops layer with zero keys —
     zero sketched/raw keys contribute zero attention weight).
+
+    zv0 (bh, r, r*h) / zd0 (bh, r, r): optional factored initial prefix
+    state (see z_to_factored) — a snapshot-resumed prefill attends through
+    it exactly as if the folded tokens preceded the sequence. When
+    return_state, also returns (zv, zd): the state after folding every
+    block, ready to be fed back as (zv0, zd0).
     """
     bh, n, r = qm.shape
     h = v.shape[-1]
     blk = min(block_size, n)
     assert n % blk == 0, (n, blk)
+    if zv0 is None:
+        zv0 = jnp.zeros((bh, r, r * h), jnp.float32)
+    if zd0 is None:
+        zd0 = jnp.zeros((bh, r, r), jnp.float32)
     grid = (bh, n // blk)
     kernel = functools.partial(_kernel, degree=degree, scale=scale,
                                local_exact=local_exact)
-    return pl.pallas_call(
+    state_spec = lambda shp: pl.BlockSpec((1, *shp), lambda i, t: (i, 0, 0))
+    out, zv, zd = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -109,12 +152,23 @@ def polysketch_causal_pallas(qm, km, q, k, v, *, degree: int, scale: float,
             pl.BlockSpec((1, blk, h), lambda i, t: (i, t, 0)),
             pl.BlockSpec((1, blk, h), lambda i, t: (i, t, 0)),
             pl.BlockSpec((1, blk, h), lambda i, t: (i, t, 0)),
+            state_spec((r, r * h)),
+            state_spec((r, r)),
         ],
-        out_specs=pl.BlockSpec((1, blk, h), lambda i, t: (i, t, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, n, h), v.dtype),
+        out_specs=[
+            pl.BlockSpec((1, blk, h), lambda i, t: (i, t, 0)),
+            state_spec((r, r * h)),
+            state_spec((r, r)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, h), v.dtype),
+            jax.ShapeDtypeStruct((bh, r, r * h), jnp.float32),
+            jax.ShapeDtypeStruct((bh, r, r), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((r, r * h), jnp.float32),
             pltpu.VMEM((r, r), jnp.float32),
         ],
         interpret=interpret,
-    )(qm, km, q, k, v)
+    )(qm, km, q, k, v, zv0, zd0)
+    return (out, zv, zd) if return_state else out

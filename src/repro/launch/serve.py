@@ -3,6 +3,13 @@ cache under a simulated Poisson arrival process.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2s-polysketch \
       --smoke --requests 8 --slots 4 --prompt-len 64 --gen 32 --rate 4
+
+Shared-system-prompt workload (every request shares an N-token prefix and
+diverges after it) with the prefix-reuse snapshot cache:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2s-polysketch \
+      --smoke --requests 8 --prompt-len 96 --shared-prefix 64 \
+      --prefix-cache-mb 8
 """
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import PrefixCache, ServeEngine
 
 
 def _percentile(xs, p):
@@ -65,6 +72,13 @@ def main(argv=None):
                          "0 = all requests queued at t=0")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="stop generation at this token id (-1 = never)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of a shared prompt prefix across ALL "
+                         "requests (system-prompt workload); 0 = "
+                         "independent random prompts")
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="prefix-reuse snapshot cache byte budget in MiB "
+                         "(0 = cache off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -73,25 +87,40 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params, _ = model.init(key)
 
+    prefix_cache = (PrefixCache(int(args.prefix_cache_mb * 2 ** 20))
+                    if args.prefix_cache_mb > 0 else None)
     engine = ServeEngine(model, cfg, params, slots=args.slots,
-                         max_len=args.prompt_len + args.gen)
+                         max_len=args.prompt_len + args.gen,
+                         prefix_cache=prefix_cache)
     rng = np.random.default_rng(args.seed)
 
-    # A few fixed prompt-length buckets (not a continuum) keeps the
-    # per-length prefill retrace count bounded while still exercising
-    # mixed-length admission.
-    buckets = sorted({max(1, args.prompt_len // 2),
-                      max(1, 3 * args.prompt_len // 4), args.prompt_len})
     eos = None if args.eos_id < 0 else args.eos_id
+    if args.shared_prefix:
+        if not 0 < args.shared_prefix < args.prompt_len:
+            raise SystemExit("--shared-prefix must be in (0, prompt_len)")
+        shared = rng.integers(0, cfg.vocab_size, size=args.shared_prefix)
+        suffix_len = args.prompt_len - args.shared_prefix
+        def make_prompt():
+            sfx = rng.integers(0, cfg.vocab_size, size=suffix_len)
+            return jax.numpy.asarray(np.concatenate([shared, sfx]),
+                                     dtype=jax.numpy.int32)
+    else:
+        # A few fixed prompt-length buckets (not a continuum) keeps the
+        # per-length prefill retrace count bounded while still exercising
+        # mixed-length admission.
+        buckets = sorted({max(1, args.prompt_len // 2),
+                          max(1, 3 * args.prompt_len // 4), args.prompt_len})
+        def make_prompt():
+            plen = int(rng.choice(buckets))
+            return jax.numpy.asarray(rng.integers(0, cfg.vocab_size,
+                                                  size=plen),
+                                     dtype=jax.numpy.int32)
     t = 0.0
     arrivals = []
     for _ in range(args.requests):
         if args.rate > 0:
             t += float(rng.exponential(1.0 / args.rate))
-        plen = int(rng.choice(buckets))
-        prompt = jax.numpy.asarray(
-            rng.integers(0, cfg.vocab_size, size=plen), dtype=jax.numpy.int32)
-        arrivals.append((t, prompt, args.gen, eos))
+        arrivals.append((t, make_prompt(), args.gen, eos))
 
     outs, wall = simulate(engine, arrivals)
     stats = engine.stats()
@@ -105,6 +134,18 @@ def main(argv=None):
           f"p95={_percentile(ttfts, 95) * 1e3:.0f}ms")
     print(f"latency p50={_percentile(lats, 50) * 1e3:.0f}ms "
           f"p95={_percentile(lats, 95) * 1e3:.0f}ms")
+    if prefix_cache is not None:
+        pc = stats["prefix_cache"]
+        print(f"prefix cache: {pc['hits']}/{pc['lookups']} hits, "
+              f"{pc['hit_tokens']} prompt tokens restored, "
+              f"{pc['entries']} entries / {pc['bytes'] / 2**20:.2f} MiB "
+              f"({pc['evictions']} evictions)")
+        if (args.shared_prefix >= cfg.lt_block_size and args.requests >= 3
+                and pc["hits"] == 0):
+            # requests 3+ of a shared-prefix workload must hit (req 2
+            # promotes the shared boundary) — a zero here is a regression
+            raise SystemExit("prefix cache: expected hits in shared-prefix "
+                             "workload, got none")
     return outs
 
 

@@ -71,8 +71,7 @@ def main(argv=None):
         mesh = make_mesh([int(x) for x in shape_s.split("x")],
                          axes_s.split(","))
         params_sh = shardings_for(axes, params, mesh)
-        state = jax.device_put(state, jax.tree_util.tree_map(
-            lambda s: s, _state_shardings(state, params_sh, mesh)))
+        state = jax.device_put(state, _state_shardings(state, params_sh, mesh))
         step_fn = jax.jit(step_fn)
     else:
         step_fn = jax.jit(step_fn)

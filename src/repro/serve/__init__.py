@@ -1,5 +1,8 @@
 from repro.serve.engine import (GenerationResult, Request, RequestOutput,
                                 ServeEngine, generate, make_serve_fns)
+from repro.serve.prefix_cache import (PrefixCache, cache_is_snapshotable,
+                                      restore_into, snapshot_of_cache)
 
-__all__ = ["GenerationResult", "Request", "RequestOutput", "ServeEngine",
-           "generate", "make_serve_fns"]
+__all__ = ["GenerationResult", "PrefixCache", "Request", "RequestOutput",
+           "ServeEngine", "cache_is_snapshotable", "generate",
+           "make_serve_fns", "restore_into", "snapshot_of_cache"]

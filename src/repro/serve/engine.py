@@ -17,6 +17,11 @@ slots decode along on stale state (their outputs are never read, and
 admission rewrites the whole slot slice — cache, token, pos) until the
 queue refills them.
 
+With a `PrefixCache` attached (serve.prefix_cache), admission first does a
+longest-prefix lookup over a content-addressed store of constant-size
+sketch-state snapshots and resumes prefill from the match point — a shared
+system prompt costs its prefill once, then a dictionary lookup.
+
 serve_prefill / serve_step (`make_serve_fns`) remain the single-shot
 functions the dry-run lowers for prefill_* / decode_* / long_* shape cells.
 """
@@ -32,6 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.decode import broadcast_slot_caches, slot_scatter
+from repro.serve.prefix_cache import (PrefixCache, cache_is_snapshotable,
+                                      restore_into, snapshot_of_cache)
 
 
 def make_serve_fns(model, cfg):
@@ -138,7 +145,8 @@ class ServeEngine:
     """
 
     def __init__(self, model, cfg, params, *, slots: int = 4,
-                 max_len: int = 4096):
+                 max_len: int = 4096,
+                 prefix_cache: PrefixCache | None = None):
         if cfg.family == "audio":
             raise NotImplementedError("ServeEngine serves LM families only")
         if slots < 1:
@@ -157,10 +165,21 @@ class ServeEngine:
         # Device state: slot-stacked cache pytree (leading slot axis over
         # batch-1 caches; per-slot `pos` scalars become a (slots,) vector),
         # the next token to feed each slot, and each slot's context depth.
-        self._slot_caches = broadcast_slot_caches(
-            init_slot(params, max_len), slots)
+        slot_cache0 = init_slot(params, max_len)
+        self._slot_caches = broadcast_slot_caches(slot_cache0, slots)
         self._slot_tokens = jnp.zeros((slots, 1, 1), jnp.int32)
         self._slot_pos = jnp.zeros((slots,), jnp.int32)
+
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None:
+            # constant-size snapshots need every cache node to be a
+            # polysketch prefix state (z + empty buffers at block edges)
+            if not cache_is_snapshotable(slot_cache0):
+                raise ValueError(
+                    "prefix cache requires a pure-polysketch decode cache "
+                    f"(config {cfg.name!r} carries other cache state)")
+            prefix_cache.bind_block_size(cfg.lt_block_size)
+            prefix_cache.bind_params(params)  # snapshots are weight-specific
 
         def prefill_one(params, tokens):
             # tokens: (1, S) at the request's own length — no padding enters
@@ -170,6 +189,22 @@ class ServeEngine:
                                            mode="prefill", cache=cache)
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return tok, cache
+
+        def prefill_resume(params, tokens, cache, pos0):
+            # resumed prefill: `cache` already folds the first pos0
+            # (block-aligned) tokens, so this chunk attends through it and
+            # RoPE runs at the true absolute positions. Retraced per chunk
+            # length. NOT donated: `cache` may alias stored snapshot arrays.
+            positions = pos0 + jnp.arange(tokens.shape[1])
+            logits, cache, _ = model.apply(params, {"tokens": tokens},
+                                           mode="prefill", cache=cache,
+                                           positions=positions)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return tok, cache
+
+        def restore(params, snapshot, n_tokens):
+            return restore_into(init_slot(params, self.max_len), snapshot,
+                                n_tokens)
 
         def decode_one(params, tok, pos, cache):
             logits, cache, _ = model.apply(params, {"tokens": tok},
@@ -182,6 +217,8 @@ class ServeEngine:
         # the full cache pytree every generated token; callers must treat
         # the cache they pass in as consumed.
         self._prefill = jax.jit(prefill_one)
+        self._prefill_resume = jax.jit(prefill_resume)
+        self._restore = jax.jit(restore)
         self._decode = jax.jit(jax.vmap(decode_one, in_axes=(None, 0, 0, 0)),
                                donate_argnums=(3,))
         self._scatter = jax.jit(slot_scatter, donate_argnums=(0,))
@@ -245,6 +282,38 @@ class ServeEngine:
             return self._retire(si, "length")
         return None
 
+    def _prefill_cached(self, req: Request):
+        """Prefill through the prefix cache: longest-prefix snapshot restore,
+        resume from the match point, snapshot admission.
+
+        The prefill may run in two chunks when a shared-but-unsnapshotted
+        boundary was detected (PrefixCache promote policy) — the split point
+        is block-aligned, so the intermediate state is itself a valid
+        snapshot. Resumed chunks are bit-identical to the cold path."""
+        pc = self.prefix_cache
+        plan = pc.plan(np.asarray(req.prompt))
+        cache, pos = None, 0
+        if plan.n_restore:
+            cache = self._restore(self.params, plan.snapshot,
+                                  jnp.asarray(plan.n_restore, jnp.int32))
+            pos = plan.n_restore
+        tok = None
+        for cut in plan.chunks:
+            chunk = req.prompt[pos:cut][None]
+            if cache is None:
+                tok, cache = self._prefill(self.params, chunk)
+            else:
+                tok, cache = self._prefill_resume(
+                    self.params, chunk, cache, jnp.asarray(pos, jnp.int32))
+            if cut == plan.n_promote:
+                pc.insert(plan.promote_key, cut, snapshot_of_cache(cache))
+            pos = cut
+        if plan.n_trunc and plan.n_trunc != plan.n_promote:
+            # the final cache's z covers exactly the block-aligned
+            # truncation of the prompt (the tail sits in the buffers)
+            pc.insert(plan.trunc_key, plan.n_trunc, snapshot_of_cache(cache))
+        return tok, cache
+
     def _admit(self) -> list[RequestOutput]:
         """Fill free slots from the queue (FIFO). Prefill is per-request at
         its native length; only the target slot's cache slice is written."""
@@ -256,7 +325,10 @@ class ServeEngine:
                 break
             req = self.queue.popleft()
             t0 = time.perf_counter()
-            tok, cache = self._prefill(self.params, req.prompt[None])
+            if self.prefix_cache is not None:
+                tok, cache = self._prefill_cached(req)
+            else:
+                tok, cache = self._prefill(self.params, req.prompt[None])
             tok = jax.block_until_ready(tok)
             self.total_prefill_s += time.perf_counter() - t0
             self.prefills += 1
@@ -281,6 +353,7 @@ class ServeEngine:
         done = self._admit()
         if self.n_active == 0:
             return done
+        active = np.array([not s.free for s in self._slots])
         t0 = time.perf_counter()
         toks, self._slot_caches = self._decode(
             self.params, self._slot_tokens, self._slot_pos, self._slot_caches)
@@ -288,7 +361,11 @@ class ServeEngine:
         self.total_decode_s += time.perf_counter() - t0
         self.decode_steps += 1
         self._slot_tokens = toks[:, :, None]
-        self._slot_pos = self._slot_pos + 1   # inactive slots: harmless
+        # free slots decode along on stale state but their position is
+        # FROZEN: a long drain must never push pos past max_len (KV-cache
+        # families index their cache at pos; RoPE angles stay bounded)
+        self._slot_pos = jnp.where(jnp.asarray(active),
+                                   self._slot_pos + 1, self._slot_pos)
         for si, slot in enumerate(self._slots):
             if slot.free:
                 continue
@@ -316,13 +393,15 @@ class ServeEngine:
         self.finished = []
         self.total_prefill_s = self.total_decode_s = 0.0
         self.decode_steps = self.prefills = 0
+        if self.prefix_cache is not None:
+            self.prefix_cache.reset_stats()
 
     def stats(self) -> dict:
         gen_tokens = sum(len(o.tokens) for o in self.finished)
         # first token of every request comes from the prefill argmax, so
         # decode throughput counts only decode-step-produced tokens
         decode_tokens = sum(o.decode_steps for o in self.finished)
-        return {
+        out = {
             "requests": len(self.finished),
             "generated_tokens": gen_tokens,
             "prefills": self.prefills,
@@ -332,3 +411,6 @@ class ServeEngine:
             "decode_tok_per_s": (decode_tokens / self.total_decode_s
                                  if self.total_decode_s else 0.0),
         }
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats()
+        return out

@@ -1,0 +1,301 @@
+"""Prefix-reuse sketch-state cache: content-addressed constant-size snapshots.
+
+Softmax serving stacks pay O(n) memory per cached prefix (paged KV), so
+prefix caching is a capacity-management problem. PolySketchFormer's decode
+state is O(1) in context length — an r^2 x (h+1) prefix matrix per kv-head
+plus one partial block buffer — and at any *block-aligned* position the
+buffer is empty, so a snapshot of the state after a block-aligned prefix is
+just the per-layer folded `z` (+ the position): constant-size no matter how
+long the prefix is. Thousands of requests sharing a system prompt / few-shot
+preamble can therefore resume prefill from the match point for the cost of a
+dictionary lookup and a suffix-length prefill.
+
+Content addressing: a SHA-256 rolling-hash chain over block_size-token
+prompt blocks. key_d = H(key_{d-1} || tokens[(d-1)b : db]) names the exact
+d-block prefix *content*, so lookup is a walk down the request's own chain —
+the deepest key present is the longest reusable prefix. Chains for prompts
+that share a prefix share keys exactly up to the divergence block.
+
+Snapshot admission is two-tier:
+  - after every prefill, the state at the prompt's block-aligned truncation
+    is inserted (multi-turn reuse: a follow-up prompt extending this one
+    hits it directly);
+  - a bounded *seen-key* set records every chain key ever served; when a
+    lookup finds a seen-but-unsnapshotted boundary deeper than its best
+    snapshot (i.e. a second request sharing that prefix), the engine splits
+    the prefill there and snapshots the boundary ("allocate on reuse") —
+    so shared system prompts with divergent suffixes are detected
+    automatically and hit from the third occurrence on.
+
+Eviction is LRU under a byte budget; lookups refresh recency.
+
+Bit-exactness: core.decode.polysketch_prefill accumulates z block-by-block
+(the scan carry) and resumes from cache.z, so logits and final cache from a
+snapshot-resumed prefill equal a cold full-prompt prefill bit-for-bit.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decode import PolysketchCache
+
+
+# ---------------------------------------------------------------------------
+# snapshot extraction / restoration over the model's decode-cache pytree
+# ---------------------------------------------------------------------------
+
+def _is_psk(node) -> bool:
+    return isinstance(node, PolysketchCache)
+
+
+def cache_is_snapshotable(cache) -> bool:
+    """True iff every stateful node of the decode cache is a PolysketchCache.
+
+    Only then is a block-aligned snapshot constant-size (z + pos with empty
+    buffers); KV / ring / recurrent caches would make it O(n) or lossy.
+    """
+    nodes = jax.tree_util.tree_leaves(
+        cache, is_leaf=lambda x: isinstance(x, tuple) and hasattr(x, "_fields"))
+    return bool(nodes) and all(_is_psk(n) for n in nodes)
+
+
+def snapshot_of_cache(cache):
+    """Constant-size snapshot: the per-layer folded prefix states `z` only.
+
+    Valid at block-aligned positions, where buffers are empty by
+    construction. The pytree keeps the cache's layer structure with each
+    PolysketchCache node replaced by its z array.
+    """
+    return jax.tree_util.tree_map(lambda c: c.z, cache, is_leaf=_is_psk)
+
+
+def restore_into(fresh_cache, snapshot, n_tokens):
+    """Rebuild a decode cache from a snapshot: z restored, buffers empty,
+    pos = n_tokens (block-aligned). `fresh_cache` supplies zeros/structure."""
+    def _restore(c, z):
+        pos = jnp.broadcast_to(jnp.asarray(n_tokens, c.pos.dtype), c.pos.shape)
+        return c._replace(z=z.astype(c.z.dtype), pos=pos)
+    return jax.tree_util.tree_map(_restore, fresh_cache, snapshot,
+                                  is_leaf=_is_psk)
+
+
+def snapshot_nbytes(snapshot) -> int:
+    return sum(int(x.size * x.dtype.itemsize)
+               for x in jax.tree_util.tree_leaves(snapshot))
+
+
+def params_fingerprint(params) -> bytes:
+    """Cheap content fingerprint of a parameter tree.
+
+    Hashes every leaf's path/shape/dtype, a head sample of its values, and
+    whole-leaf moment reductions (so an edit anywhere in the leaf moves the
+    fingerprint) — two engines attaching one PrefixCache with different
+    weights are rejected loudly instead of silently restoring foreign
+    state."""
+    import numpy as np
+    h = hashlib.sha256()
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        h.update(repr(kp).encode())
+        h.update(str((leaf.shape, str(leaf.dtype))).encode())
+        flat = jnp.ravel(leaf)
+        h.update(np.ascontiguousarray(np.asarray(flat[:32])).tobytes())
+        if jnp.issubdtype(leaf.dtype, jnp.inexact):
+            f32 = flat.astype(jnp.float32)
+            moments = np.asarray([np.float64(jnp.sum(f32)),
+                                  np.float64(jnp.sum(jnp.abs(f32)))])
+            h.update(moments.tobytes())
+    return h.digest()
+
+
+# ---------------------------------------------------------------------------
+# the content-addressed store
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Entry:
+    snapshot: object
+    n_tokens: int
+    nbytes: int
+
+
+@dataclass
+class PrefillPlan:
+    """What the engine should do for one prompt (all host-side ints).
+
+    n_restore: tokens covered by the best snapshot (0 = cold start).
+    snapshot:  the z-pytree to restore, or None.
+    n_promote: seen-but-unsnapshotted shared boundary to split the prefill
+               at and snapshot (None = single-chunk prefill).
+    n_trunc:   the prompt's block-aligned truncation, snapshotted after the
+               prefill completes (0 = prompt shorter than one block).
+    """
+    n_restore: int = 0
+    snapshot: object = None
+    n_promote: int | None = None
+    promote_key: bytes = b""
+    n_trunc: int = 0
+    trunc_key: bytes = b""
+    chunks: list[int] = field(default_factory=list)  # prefill cut points
+
+
+class PrefixCache:
+    """LRU, byte-budgeted store of constant-size prefix-state snapshots.
+
+    block_size is bound by the engine to the model's attention block
+    (cfg.lt_block_size) — snapshots are only valid at its multiples.
+    """
+
+    def __init__(self, max_bytes: int, block_size: int | None = None, *,
+                 max_seen_keys: int = 1 << 16):
+        if max_bytes < 1:
+            raise ValueError("max_bytes must be positive")
+        self.max_bytes = int(max_bytes)
+        self.block_size = block_size
+        self.max_seen_keys = max_seen_keys
+        self._params_fp: bytes | None = None
+        self._entries: OrderedDict[bytes, _Entry] = OrderedDict()
+        self._seen: OrderedDict[bytes, None] = OrderedDict()
+        self.bytes = 0
+        self.lookups = self.hits = self.misses = 0
+        self.hit_tokens = 0
+        self.inserts = self.evictions = 0
+
+    def bind_block_size(self, block_size: int):
+        if self.block_size is None:
+            self.block_size = block_size
+        elif self.block_size != block_size:
+            raise ValueError(
+                f"prefix cache bound to block_size={self.block_size}, "
+                f"engine model uses {block_size}")
+
+    def bind_params(self, params):
+        """Tie the store to one parameter set: snapshots are only valid
+        under the weights that produced them."""
+        fp = params_fingerprint(params)
+        if self._params_fp is None:
+            self._params_fp = fp
+        elif self._params_fp != fp:
+            raise ValueError(
+                "prefix cache already holds snapshots for different model "
+                "weights; use one PrefixCache per parameter set")
+
+    # -- content addressing ------------------------------------------------
+
+    def _chain(self, tokens, n_blocks: int) -> list[bytes]:
+        """key_d for d = 1..n_blocks over block_size-token prompt blocks."""
+        import numpy as np
+        blk = self.block_size
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+        key = hashlib.sha256(b"psk-prefix:%d" % blk).digest()
+        keys = []
+        for d in range(n_blocks):
+            key = hashlib.sha256(
+                key + toks[d * blk:(d + 1) * blk].tobytes()).digest()
+            keys.append(key)
+        return keys
+
+    # -- lookup / planning -------------------------------------------------
+
+    def plan(self, tokens) -> PrefillPlan:
+        """Longest-prefix lookup + admission plan for one prompt.
+
+        The match is capped at the deepest block boundary strictly inside
+        the prompt (>= 1 token must remain to prefill for the first-token
+        logits). Marks the prompt's chain keys as seen.
+        """
+        assert self.block_size, "bind_block_size() first"
+        blk = self.block_size
+        plen = int(len(tokens))
+        self.lookups += 1
+        trunc_d = plen // blk                 # full block-aligned truncation
+        max_d = (plen - 1) // blk             # deepest *usable* match depth
+        keys = self._chain(tokens, trunc_d)
+
+        # probe every depth: snapshots are inserted at truncation/promote
+        # boundaries without their shallower chain keys, and the bounded
+        # seen-set may have evicted a shallow key while a deeper snapshot
+        # is still resident — an early break on a cold key would miss it
+        hit_d = seen_d = 0
+        for d in range(1, max_d + 1):
+            key = keys[d - 1]
+            if key in self._entries:
+                hit_d = seen_d = d
+            elif key in self._seen:
+                seen_d = d
+
+        plan = PrefillPlan(n_trunc=trunc_d * blk,
+                           trunc_key=keys[trunc_d - 1] if trunc_d else b"")
+        if hit_d:
+            entry = self._entries[keys[hit_d - 1]]
+            self._entries.move_to_end(keys[hit_d - 1])
+            plan.n_restore = entry.n_tokens
+            plan.snapshot = entry.snapshot
+            self.hits += 1
+            self.hit_tokens += entry.n_tokens
+        else:
+            self.misses += 1
+        if seen_d > hit_d:
+            # a previous prompt shared this boundary but no snapshot exists
+            # there yet: split the prefill and allocate on reuse
+            plan.n_promote = seen_d * blk
+            plan.promote_key = keys[seen_d - 1]
+        plan.chunks = [c for c in (plan.n_promote, plen)
+                       if c is not None and c > plan.n_restore]
+
+        for d in range(trunc_d):
+            self._mark_seen(keys[d])
+        return plan
+
+    def _mark_seen(self, key: bytes):
+        self._seen[key] = None
+        self._seen.move_to_end(key)
+        while len(self._seen) > self.max_seen_keys:
+            self._seen.popitem(last=False)
+
+    # -- admission / eviction ----------------------------------------------
+
+    def insert(self, key: bytes, n_tokens: int, snapshot):
+        """Admit one snapshot under the byte budget (LRU eviction)."""
+        if not key:
+            return
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return
+        nbytes = snapshot_nbytes(snapshot)
+        if nbytes > self.max_bytes:
+            return  # one snapshot larger than the whole budget
+        while self.bytes + nbytes > self.max_bytes and self._entries:
+            _, old = self._entries.popitem(last=False)
+            self.bytes -= old.nbytes
+            self.evictions += 1
+        self._entries[key] = _Entry(snapshot, int(n_tokens), nbytes)
+        self.bytes += nbytes
+        self.inserts += 1
+
+    # -- accounting --------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def reset_stats(self):
+        self.lookups = self.hits = self.misses = 0
+        self.hit_tokens = self.inserts = self.evictions = 0
+
+    def stats(self) -> dict:
+        return {
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+            "inserts": self.inserts,
+            "evictions": self.evictions,
+            "entries": len(self._entries),
+            "bytes": self.bytes,
+            "max_bytes": self.max_bytes,
+            "seen_keys": len(self._seen),
+        }

@@ -11,7 +11,8 @@ from repro.core import (block_causal_linear_attention, init_polysketch_cache,
                         init_sketch, polysketch_decode_step,
                         polysketch_prefill, qk_layernorm,
                         sketch_param_count)
-from repro.core.decode import (broadcast_slot_caches, slot_gather,
+from repro.core.decode import (broadcast_slot_caches, init_kv_cache,
+                               kv_ring_decode_step, slot_gather,
                                slot_scatter)
 from repro.core.sketches import sketch_half
 from repro.utils import param_count
@@ -71,6 +72,61 @@ def test_prefill_boundary_then_decode_matches_train(s0, hq, hkv):
     np.testing.assert_allclose(np.stack(outs, axis=2),
                                full[:, :, s0:], atol=1e-4)
     assert int(cache.pos) == n
+
+
+@pytest.mark.parametrize("hq,hkv", [(2, 2), (4, 2)])
+@pytest.mark.parametrize("suffix", [BLK, BLK + 5, 3])
+def test_prefill_resume_bit_equals_cold_prefill(suffix, hq, hkv):
+    """A prefill resumed from a block-aligned cache (z + pos, empty buffers)
+    is bit-identical to the cold prefill of the concatenated sequence —
+    outputs AND final cache (the prefix-cache snapshot contract)."""
+    n0 = 2 * BLK
+    n = n0 + suffix
+    q, k, v, qm, km, scale = _mh_setup(seed=suffix + hq, hq=hq, hkv=hkv, n=n)
+    bsz = q.shape[0]
+
+    cold = init_polysketch_cache(bsz, hkv, 16, 8, BLK)
+    out_cold, cold = polysketch_prefill(
+        cache=cold, qm=qm, km=km, q=q, k=k, v=v, degree=4, scale=scale)
+
+    c1 = init_polysketch_cache(bsz, hkv, 16, 8, BLK)
+    _, c1 = polysketch_prefill(
+        cache=c1, qm=qm[:, :, :n0], km=km[:, :, :n0], q=q[:, :, :n0],
+        k=k[:, :, :n0], v=v[:, :, :n0], degree=4, scale=scale)
+    # snapshot = z + pos only; buffers are empty at the block boundary
+    resumed = init_polysketch_cache(bsz, hkv, 16, 8, BLK)._replace(
+        z=c1.z, pos=c1.pos)
+    out_res, resumed = polysketch_prefill(
+        cache=resumed, qm=qm[:, :, n0:], km=km[:, :, n0:], q=q[:, :, n0:],
+        k=k[:, :, n0:], v=v[:, :, n0:], degree=4, scale=scale)
+
+    assert jnp.array_equal(out_res, out_cold[:, :, n0:])
+    for got, want in zip(resumed, cold):
+        assert jnp.array_equal(got, want)
+
+
+def test_kv_ring_wraparound_matches_windowed_reference():
+    """After pos > window the ring rotates; outputs must keep matching a
+    sliding-window softmax over the last W tokens computed from scratch."""
+    W, steps, hq, hkv, h = 8, 21, 4, 2, 16
+    g = hq // hkv
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    qs = jax.random.normal(ks[0], (steps, 1, hq, h))
+    kks = jax.random.normal(ks[1], (steps, 1, hkv, h))
+    vs = jax.random.normal(ks[2], (steps, 1, hkv, h))
+    scale = 1.0 / np.sqrt(h)
+
+    cache = init_kv_cache(1, hkv, h, W)
+    for t in range(steps):
+        out, cache = kv_ring_decode_step(cache, qs[t], kks[t], vs[t])
+        lo = max(0, t - W + 1)
+        kw = jnp.repeat(kks[lo:t + 1], g, axis=2)      # (w, 1, hq, h)
+        vw = jnp.repeat(vs[lo:t + 1], g, axis=2)
+        logits = jnp.einsum("bnh,sbnh->bns", qs[t], kw) * scale
+        ref = jnp.einsum("bns,sbnh->bnh", jax.nn.softmax(logits, -1), vw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, err_msg=f"step {t}")
+    assert int(cache.pos) == steps
 
 
 def test_fold_at_block_edge_updates_prefix_state():

@@ -105,6 +105,35 @@ def test_polysketch_unaligned_seq_padding():
     np.testing.assert_allclose(np.array(out), np.array(want), atol=1e-4)
 
 
+@pytest.mark.parametrize("hq,hkv", [(2, 2), (4, 2)])
+@pytest.mark.parametrize("impl", ["xla", "interpret"])
+def test_polysketch_resume_from_state_matches_full(impl, hq, hkv):
+    """Splitting a sequence at a block boundary and resuming the second part
+    with z0 = the first part's returned state reproduces the one-shot run —
+    on both the jnp block path and the Pallas kernel."""
+    B, S, hd, r, blk, cut = 2, 96, 16, 8, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    qm = _rand(ks[0], (B, hq, S, r), jnp.float32) * 0.5
+    km = _rand(ks[1], (B, hkv, S, r), jnp.float32) * 0.5
+    q = _rand(ks[2], (B, hq, S, hd), jnp.float32)
+    k = _rand(ks[3], (B, hkv, S, hd), jnp.float32)
+    v = _rand(ks[4], (B, hkv, S, hd), jnp.float32)
+    kw = dict(degree=4, scale=1.0 / hd, block_size=blk, impl=impl)
+    out_full, z_full = ops.polysketch_attention(qm, km, q, k, v,
+                                                return_state=True, **kw)
+    c = lambda x: x[..., :cut, :]
+    s = lambda x: x[..., cut:, :]
+    o1, z1 = ops.polysketch_attention(c(qm), c(km), c(q), c(k), c(v),
+                                      return_state=True, **kw)
+    o2, z2 = ops.polysketch_attention(s(qm), s(km), s(q), s(k), s(v),
+                                      z0=z1, return_state=True, **kw)
+    got = jnp.concatenate([o1, o2], axis=-2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(out_full),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(z2), np.asarray(z_full),
+                               atol=1e-4, rtol=1e-5)
+
+
 def test_kernel_grid_state_reset_between_heads():
     """Scratch prefix state must reset at t==0 for every (batch, head)."""
     B, H, S, hd, r = 1, 3, 64, 8, 4

@@ -1,0 +1,260 @@
+"""Prefix-reuse snapshot cache invariants.
+
+The headline contract: logits and final cache from a snapshot-resumed
+prefill are EXACTLY equal (bit-for-bit) to a cold full-prompt prefill —
+across GQA, non-block-aligned tails, and multi-layer models. Plus: LRU
+eviction under a byte budget, the promote-on-reuse planning policy, and
+engine-level hit accounting with output parity in a shared-prefix workload.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (PrefixCache, ServeEngine, cache_is_snapshotable,
+                         generate, restore_into, snapshot_of_cache)
+from repro.serve.prefix_cache import snapshot_nbytes
+
+BLK = 16  # smoke config lt_block_size
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(seed=0, **overrides):
+    cfg = get_config("gpt2s-polysketch", smoke=True)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    return model, cfg, params
+
+
+def _tokens(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, n), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# bit parity: snapshot-resumed prefill == cold full-prompt prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_kv_heads", [4, 2, 1])       # MHA, GQA, MQA
+@pytest.mark.parametrize("suffix", [BLK, BLK + 5, 7])   # aligned + tails
+def test_snapshot_resume_bit_parity(n_kv_heads, suffix):
+    model, cfg, params = _setup(n_kv_heads=n_kv_heads)  # 2 layers
+    n0 = 3 * BLK                                        # block-aligned prefix
+    prompt = _tokens(cfg, n0 + suffix, seed=n0 + suffix + n_kv_heads)
+    max_len = prompt.shape[0] + 8
+
+    # cold full-prompt prefill
+    cache = model.init_slot_cache(params, max_len)
+    logits_cold, cache_cold, _ = model.apply(
+        params, {"tokens": prompt[None]}, mode="prefill", cache=cache)
+
+    # snapshot after prefilling exactly the block-aligned prefix
+    cache = model.init_slot_cache(params, max_len)
+    _, cache_pfx, _ = model.apply(
+        params, {"tokens": prompt[None, :n0]}, mode="prefill", cache=cache)
+    snap = snapshot_of_cache(cache_pfx)
+
+    # restore into a FRESH cache and resume from the match point
+    restored = restore_into(model.init_slot_cache(params, max_len), snap,
+                            jnp.asarray(n0, jnp.int32))
+    logits_res, cache_res, _ = model.apply(
+        params, {"tokens": prompt[None, n0:]}, mode="prefill", cache=restored,
+        positions=n0 + jnp.arange(suffix))
+
+    assert jnp.array_equal(logits_res, logits_cold[:, n0:])
+    for got, want in zip(jax.tree_util.tree_leaves(cache_res),
+                         jax.tree_util.tree_leaves(cache_cold)):
+        assert jnp.array_equal(got, want), (got.shape, want.shape)
+
+
+def test_resumed_cache_decodes_identically():
+    """Decode steps taken from a snapshot-restored cache match decode from
+    the cold cache token-for-token (the state is fully interchangeable)."""
+    model, cfg, params = _setup(seed=2)
+    prompt = _tokens(cfg, 2 * BLK + 3, seed=11)
+    pc = PrefixCache(max_bytes=1 << 22)
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=64,
+                      prefix_cache=pc)
+    eng.submit(prompt, 8)          # miss: seeds the cache
+    ref = eng.run()[0]
+    eng.submit(prompt, 8)          # promote; third submit would hit
+    eng.submit(prompt, 8)
+    outs = eng.run()
+    assert pc.hits >= 1
+    for o in outs:
+        np.testing.assert_array_equal(o.tokens, ref.tokens)
+
+
+# ---------------------------------------------------------------------------
+# store policy: LRU under a byte budget, promote-on-reuse planning
+# ---------------------------------------------------------------------------
+
+def _fake_snap(n_floats):
+    return {"z": jnp.zeros((n_floats,), jnp.float32)}
+
+
+def test_lru_eviction_respects_byte_budget():
+    snap = _fake_snap(256)                       # 1 KiB each
+    per = snapshot_nbytes(snap)
+    pc = PrefixCache(max_bytes=2 * per, block_size=4)
+    k1, k2, k3 = b"k1", b"k2", b"k3"
+    pc.insert(k1, 4, snap)
+    pc.insert(k2, 8, snap)
+    assert pc.bytes == 2 * per and len(pc) == 2
+    pc.insert(k1, 4, snap)                       # touch k1: now most-recent
+    pc.insert(k3, 12, snap)                      # evicts k2 (LRU), not k1
+    assert pc.evictions == 1 and len(pc) == 2
+    assert pc.bytes <= pc.max_bytes
+    assert set(pc._entries) == {k1, k3}
+    # an entry bigger than the whole budget is rejected outright
+    pc.insert(b"huge", 4, _fake_snap(4096))
+    assert b"huge" not in pc._entries and pc.bytes <= pc.max_bytes
+
+
+def test_plan_promotes_shared_boundary_then_hits():
+    """Request 1 misses; request 2 (same prefix, new suffix) detects the
+    seen-but-unsnapshotted shared boundary and splits there; request 3 hits
+    the promoted snapshot."""
+    blk = 4
+    pc = PrefixCache(max_bytes=1 << 20, block_size=blk)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, 100, 2 * blk)          # 2 shared blocks
+    mk = lambda s: np.concatenate([prefix, rng.integers(0, 100, s)])
+
+    p1 = mk(6)                                       # 14 tokens, trunc = 12
+    plan1 = pc.plan(p1)
+    assert plan1.n_restore == 0 and plan1.n_promote is None
+    assert plan1.n_trunc == 12 and plan1.chunks == [14]
+    pc.insert(plan1.trunc_key, plan1.n_trunc, _fake_snap(8))
+
+    p2 = mk(6)                                       # shares only the prefix
+    plan2 = pc.plan(p2)
+    assert plan2.n_restore == 0                      # p1's snapshot diverged
+    assert plan2.n_promote == 2 * blk                # shared seen boundary
+    assert plan2.chunks == [8, 14]
+    pc.insert(plan2.promote_key, plan2.n_promote, _fake_snap(8))
+    pc.insert(plan2.trunc_key, plan2.n_trunc, _fake_snap(8))
+
+    plan3 = pc.plan(mk(6))
+    assert plan3.n_restore == 2 * blk and plan3.snapshot is not None
+    assert plan3.n_promote is None and plan3.chunks == [14]
+    assert pc.hits == 1 and pc.misses == 2
+
+    # identical full prompt repeated: its own truncation snapshot (depth 3,
+    # within the usable plen-1 cap) is the deepest hit — suffix-only prefill
+    plan4 = pc.plan(p1)
+    assert plan4.n_restore == 12 and plan4.n_promote is None
+    assert plan4.chunks == [14]
+
+
+def test_match_never_consumes_whole_prompt():
+    """>= 1 token must remain to prefill: a snapshot covering the entire
+    (block-aligned) prompt is not a usable match."""
+    blk = 4
+    pc = PrefixCache(max_bytes=1 << 20, block_size=blk)
+    toks = np.arange(8)
+    plan = pc.plan(toks)
+    pc.insert(plan.trunc_key, plan.n_trunc, _fake_snap(8))  # covers all 8
+    plan2 = pc.plan(toks)
+    assert plan2.n_restore <= 7
+    assert plan2.chunks and plan2.chunks[-1] == 8
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def test_engine_shared_prefix_hits_with_bit_parity():
+    """Shared-system-prompt workload: outputs bit-match the cache-off
+    engine and single-request generate(); stats report the hits."""
+    model, cfg, params = _setup(seed=3)
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab_size, 4 * BLK)
+    prompts = [jnp.asarray(np.concatenate(
+                   [shared, rng.integers(0, cfg.vocab_size, BLK + 3)]),
+                   jnp.int32)
+               for _ in range(5)]
+    pc = PrefixCache(max_bytes=1 << 22)
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=128,
+                      prefix_cache=pc)
+    for p in prompts:
+        eng.submit(p, 5)
+    outs = {o.rid: o for o in eng.run()}
+    st = eng.stats()["prefix_cache"]
+    assert st["hits"] >= 3 and st["misses"] >= 1
+    assert st["hit_tokens"] >= 3 * 4 * BLK
+    assert st["bytes"] > 0
+    for rid, p in enumerate(prompts):
+        want = np.asarray(generate(model, cfg, params, p[None], 5).tokens[0])
+        np.testing.assert_array_equal(outs[rid].tokens, want)
+
+
+def test_engine_eviction_under_byte_pressure_stays_correct():
+    """A budget holding ~one snapshot forces evictions on disjoint prompts;
+    accounting stays within budget and outputs stay exact."""
+    model, cfg, params = _setup(seed=4)
+    one_snap = snapshot_nbytes(snapshot_of_cache(
+        model.init_slot_cache(params, 64)))
+    pc = PrefixCache(max_bytes=one_snap + one_snap // 2)
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=64,
+                      prefix_cache=pc)
+    prompts = [_tokens(cfg, 2 * BLK + 1, seed=40 + i) for i in range(3)]
+    for p in prompts:
+        eng.submit(p, 4)
+    outs = {o.rid: o for o in eng.run()}
+    st = eng.stats()["prefix_cache"]
+    assert st["evictions"] >= 2 and st["bytes"] <= pc.max_bytes
+    assert st["entries"] == 1
+    for rid, p in enumerate(prompts):
+        want = np.asarray(generate(model, cfg, params, p[None], 4).tokens[0])
+        np.testing.assert_array_equal(outs[rid].tokens, want)
+
+
+def test_engine_rejects_prefix_cache_for_non_polysketch_cache():
+    model, cfg, params = _setup(seed=0, attention="softmax")
+    assert not cache_is_snapshotable(model.init_slot_cache(params, 32))
+    with pytest.raises(ValueError):
+        ServeEngine(model, cfg, params, slots=1, max_len=32,
+                    prefix_cache=PrefixCache(max_bytes=1 << 20))
+
+
+def test_prefix_cache_block_size_binding():
+    pc = PrefixCache(max_bytes=1 << 20, block_size=32)
+    with pytest.raises(ValueError):
+        pc.bind_block_size(16)
+    pc.bind_block_size(32)  # idempotent
+    with pytest.raises(ValueError):
+        PrefixCache(max_bytes=0)
+
+
+def test_prefix_cache_rejects_foreign_params():
+    """Snapshots are weight-specific: attaching one store to engines with
+    different params must fail loudly, not restore foreign state."""
+    model, cfg, params_a = _setup(seed=7)
+    _, _, params_b = _setup(seed=8)
+    pc = PrefixCache(max_bytes=1 << 20)
+    ServeEngine(model, cfg, params_a, slots=1, max_len=32, prefix_cache=pc)
+    ServeEngine(model, cfg, params_a, slots=1, max_len=32,
+                prefix_cache=pc)  # same weights: fine
+    with pytest.raises(ValueError):
+        ServeEngine(model, cfg, params_b, slots=1, max_len=32,
+                    prefix_cache=pc)
+
+
+def test_deep_snapshot_hit_survives_seen_key_eviction():
+    """The bounded seen-set may evict a shallow chain key while a deeper
+    snapshot is still resident; the lookup walk must still find it."""
+    blk = 4
+    pc = PrefixCache(max_bytes=1 << 20, block_size=blk)
+    toks = np.arange(16)                       # 4 blocks
+    plan = pc.plan(toks)                       # marks keys, trunc at 16
+    pc.insert(plan.trunc_key, plan.n_trunc, _fake_snap(8))
+    pc._seen.clear()                           # simulate total seen eviction
+    plan2 = pc.plan(np.concatenate([toks, [1, 2, 3]]))  # extends the prompt
+    assert plan2.n_restore == 16 and plan2.snapshot is not None

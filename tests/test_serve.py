@@ -114,6 +114,36 @@ def test_engine_other_cache_paths(overrides):
             outs[rid].tokens, _ref_tokens(model, cfg, params, p, 6))
 
 
+def test_free_slot_pos_frozen_during_long_drain():
+    """A slot that retires early (deep prompt, quick EOS) must not keep
+    advancing its position while other slots drain: for KV-cache families
+    `pos` indexes the cache and feeds RoPE, so an unbounded stale-decode
+    drift could push it past max_len. Frozen slots stay put."""
+    model, cfg, params = _setup(seed=6, attention="softmax")
+    prompts = _prompts(cfg, [15, 4], seed=6)
+    ref_a = _ref_tokens(model, cfg, params, prompts[0], 3)
+    eos = int(ref_a[1])  # retire slot 0 after its second token
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=21)
+    eng.submit(prompts[0], 3, eos_id=eos)
+    eng.submit(prompts[1], 16)   # drains for many more ticks
+    frozen = None
+    outs = {}
+    while eng.busy:
+        for o in eng.step():
+            outs[o.rid] = o
+        if not eng._slots[0].free:
+            continue
+        pos0 = int(np.asarray(eng._slot_pos)[0])
+        if frozen is None:
+            frozen = pos0          # position at retirement
+        assert pos0 == frozen      # never advances again
+    assert frozen is not None and frozen <= eng.max_len
+    assert int(np.asarray(eng._slot_pos).max()) <= eng.max_len
+    # the freeze never disturbed the live slot
+    np.testing.assert_array_equal(
+        outs[1].tokens, _ref_tokens(model, cfg, params, prompts[1], 16))
+
+
 def test_submit_rejects_invalid_requests():
     model, cfg, params = _setup()
     with pytest.raises(ValueError):
