@@ -20,6 +20,8 @@ MODULES = [
     "kernel_bench",        # S3.1 lt-mult + linear-vs-quadratic attention
     "latency_vs_context",  # Figure 1 / Table 4
     "serve_throughput",    # continuous batching; decode cost flat in ctx
+                           # + sampled-vs-greedy tick cost (serve/decode_*,
+                           #   serve/sampling_overhead -> BENCH_serve.json)
     "prefix_cache",        # shared-prompt TTFT: snapshot cache off/cold/warm
     "quality_proxy",       # Figure 2 / Tables 2-3
     "selective_copying",   # Table 5 / Appendix F.1

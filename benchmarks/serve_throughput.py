@@ -1,6 +1,6 @@
 """Continuous-batching serve throughput (the paper's inference claim).
 
-Three cell families, all on the smoke polysketch config:
+Four cell families, all on the smoke polysketch config:
 
   serve/decode_flat/plen{P}   per-token decode-step cost with every slot
                               prefilled to P tokens. The polysketch decode
@@ -10,6 +10,11 @@ Three cell families, all on the smoke polysketch config:
                               reports the min-max spread.
   serve/slots{N}              engine decode throughput vs slot count.
   serve/mixed_lens            mixed prompt lengths sharing one batch.
+  serve/decode_{greedy,sampled} + serve/sampling_overhead
+                              per-token cost of the jitted tick with all
+                              slots greedy vs all sampled (temperature /
+                              top-k / top-p): the sampler is fused into
+                              the tick, so the overhead must be noise.
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import SamplingParams, ServeEngine
 
 
 def _build(seed=0):
@@ -46,48 +51,90 @@ def _warm(eng, cfg, plens, rng):
     eng.reset_stats()
 
 
+def _warm_snapshot(eng, cfg, rng, *, plen, sampling=None, warmup=4):
+    """Admit a full batch through the real scheduler (native-length
+    prefill + slot scatter), run `warmup` ticks, snapshot the slot device
+    state, then drain. The cache is deep-copied because the engine's
+    decode/scatter donate its live buffers."""
+    import jax
+    for _ in range(eng.slots):
+        eng.submit(jnp.asarray(rng.integers(0, cfg.vocab_size, plen),
+                               jnp.int32), warmup + 4, sampling=sampling)
+    for _ in range(warmup):
+        eng.step()
+    snap = (eng._slot_tokens, eng._slot_pos, eng._slot_keys, eng._slot_samp,
+            jax.tree_util.tree_map(jnp.copy, eng._slot_caches))
+    eng.run()
+    return snap
+
+
+def _interleaved_tick_us(eng, snaps, *, rounds):
+    """Median per-token cost of the jitted decode tick over each
+    snapshotted slot state in `snaps` ({label: _warm_snapshot(...)}).
+
+    ONE engine serves every label (one compiled tick, one buffer pool),
+    so between-label differences cannot come from per-engine compilation
+    or allocation placement; the timing loop interleaves single tick
+    calls across the labels, so a noisy stretch of machine time hits
+    every label's neighbouring calls equally and the per-label median
+    over hundreds of calls discards it."""
+    import jax
+    all_active = jnp.ones((eng.slots,), bool)
+    times = {label: [] for label in snaps}
+    for _ in range(rounds):
+        for label, (tokens, pos, keys, samp, caches) in snaps.items():
+            t0 = time.perf_counter()
+            out, tokens, pos, keys, caches = eng._decode(
+                eng.params, tokens, pos, keys, samp, caches, all_active)
+            jax.block_until_ready(out)
+            times[label].append(time.perf_counter() - t0)
+            # the input cache was donated; keep threading the live state
+            snaps[label] = (tokens, pos, keys, samp, caches)
+    return {label: float(np.median(ts)) / eng.slots * 1e6
+            for label, ts in times.items()}
+
+
 def _decode_us_per_token(model, cfg, params, plens, *, slots=4, warmup=4,
                          rounds=300):
-    """Min single-call per-token cost of the jitted decode step with every
-    slot prefilled to depth plen.
-
-    ONE engine serves every depth (same compiled decode step, same
-    buffers), so between-cell differences cannot come from per-engine
-    compilation or allocation placement. For each depth a batch of
-    plen-token requests is admitted through the real scheduler
-    (native-length prefill + slot scatter + warm ticks) and the resulting
-    slot state snapshotted; the timing loop then interleaves single calls
-    of the shared jitted decode step across the snapshots, so a noisy
-    stretch of machine time hits every depth's neighbouring calls equally
-    and the per-depth min over hundreds of calls discards it."""
-    import jax
+    """Per-token cost of the jitted decode tick with every slot prefilled
+    to depth plen — must be flat in plen (the O(1)-state claim)."""
     eng = ServeEngine(model, cfg, params, slots=slots,
-                      max_len=max(plens) + warmup + 8)
+                      max_len=max(plens) + warmup + 8 + rounds)
     rng = np.random.default_rng(0)
-    snaps = {}
-    for plen in plens:
-        for _ in range(slots):
-            _submit_random(eng, cfg, plen, warmup + 4, rng)
-        for _ in range(warmup):
-            eng.step()
-        # deep-copy: the engine's decode/scatter donate its live cache, so
-        # the snapshot must own its buffers to survive the drain below
-        snaps[plen] = (eng._slot_tokens, eng._slot_pos,
-                       jax.tree_util.tree_map(jnp.copy, eng._slot_caches))
-        eng.run()   # drain this depth's requests before the next
-    times = {plen: [] for plen in plens}
-    for _ in range(rounds):
-        for plen, (tokens, pos, caches) in snaps.items():
-            t0 = time.perf_counter()
-            toks, caches = eng._decode(params, tokens, pos, caches)
-            jax.block_until_ready(toks)
-            times[plen].append(time.perf_counter() - t0)
-            # the input cache was donated; keep threading the live one
-            snaps[plen] = (tokens, pos, caches)
-    # median over interleaved rounds: robust to load bursts covering up to
-    # half the window, and common-mode drift hits every cell alike
-    return {plen: float(np.median(ts)) / slots * 1e6
-            for plen, ts in times.items()}
+    snaps = {plen: _warm_snapshot(eng, cfg, rng, plen=plen, warmup=warmup)
+             for plen in plens}
+    return _interleaved_tick_us(eng, snaps, rounds=rounds)
+
+
+def _sampled_vs_greedy_us(*, plen, slots=4, warmup=4, rounds=300):
+    """Per-token cost of the jitted decode tick with all slots greedy
+    (the tick's lax.cond takes the argmax fast path) vs all slots sampled
+    (temperature 0.8, top-k 40, top-p 0.95 — full mask-and-categorical
+    sampler). Both run the SAME compiled tick — sampling params are data,
+    not trace constants — so this measures the fused sampler's marginal
+    cost with no extra host sync per token.
+
+    Runs on a serving-scale config (12L x 512, 8k vocab) rather than the
+    tiny smoke model: the smoke decode step is so small that the sampler's
+    fixed per-op dispatch overhead would dominate the ratio, which says
+    nothing about a real deployment where the tick is orders of magnitude
+    heavier and the sampler cost is unchanged."""
+    import jax
+    cfg = get_config("gpt2s-polysketch", smoke=True).replace(
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=8, head_dim=64,
+        d_ff=2048, vocab_size=8192)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, cfg, params, slots=slots,
+                      max_len=plen + warmup + 8 + rounds)
+    rng = np.random.default_rng(0)
+    sp = {"greedy": None,
+          "sampled": SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
+                                    seed=1)}
+    snaps = {mode: _warm_snapshot(eng, cfg, rng, plen=plen, sampling=s,
+                                  warmup=warmup)
+             for mode, s in sp.items()}
+    return _interleaved_tick_us(eng, snaps, rounds=rounds)
 
 
 def main(fast: bool = True):
@@ -144,6 +191,17 @@ def main(fast: bool = True):
     emit("serve/mixed_lens", wall / max(st["generated_tokens"], 1) * 1e6,
          f"decode_tok_per_s={st['decode_tok_per_s']:.1f};"
          f"lens={'/'.join(map(str, lens))};requests={len(outs)}")
+
+    # --- sampled vs greedy decode: sampler overhead must be noise --------
+    us = _sampled_vs_greedy_us(plen=32 if fast else 256,
+                               rounds=100 if fast else 300)
+    overhead = us["sampled"] / us["greedy"] - 1.0
+    for mode, v in us.items():
+        emit(f"serve/decode_{mode}", v,
+             f"us_per_token={v:.1f};slots=4;model=12Lx512v8192")
+    emit("serve/sampling_overhead", 0.0,
+         f"overhead={overhead:+.3f};"
+         f"within_5pct={'yes' if abs(overhead) <= 0.05 else 'no'}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Continuous-batching serving demo: the polysketch decode state is O(1)
 in context length, so slot admission is independent of prompt length —
 each request prefills at its own length and drops into a free slot while
-the other slots keep decoding.
+the other slots keep decoding. The second leg reruns the workload with
+per-request sampling (temperature / top-k, one reproducible stream per
+request) through the same jitted decode tick.
 
   PYTHONPATH=src python examples/serve_batch.py
 """
@@ -11,3 +13,7 @@ if __name__ == "__main__":
     main(["--arch", "gpt2s-polysketch", "--smoke", "--requests", "6",
           "--slots", "3", "--prompt-len", "48", "--gen", "16",
           "--rate", "8"])
+    main(["--arch", "gpt2s-polysketch", "--smoke", "--requests", "6",
+          "--slots", "3", "--prompt-len", "48", "--gen", "16",
+          "--rate", "8", "--temperature", "0.8", "--top-k", "40",
+          "--seed-per-request"])

@@ -4,6 +4,13 @@ cache under a simulated Poisson arrival process.
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2s-polysketch \
       --smoke --requests 8 --slots 4 --prompt-len 64 --gen 32 --rate 4
 
+Sampled workload (per-request temperature / top-k / top-p; with
+--seed-per-request every request draws an independent, reproducible
+stream seeded seed+rid):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2s-polysketch \
+      --smoke --requests 8 --temperature 0.8 --top-k 40 --seed-per-request
+
 Shared-system-prompt workload (every request shares an N-token prefix and
 diverges after it) with the prefix-reuse snapshot cache:
 
@@ -21,7 +28,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import PrefixCache, ServeEngine
+from repro.serve import PrefixCache, SamplingParams, ServeEngine, generate
 
 
 def _percentile(xs, p):
@@ -31,10 +38,10 @@ def _percentile(xs, p):
 def simulate(engine: ServeEngine, arrivals, *, quiet=False):
     """Drive the engine under timed arrivals.
 
-    arrivals: list of (arrival_s, prompt, max_new_tokens, eos_id) sorted by
-    arrival time. Requests are submitted when the wall clock passes their
-    arrival offset and admitted at the next scheduler tick — live slots
-    are never re-prefilled or reset by an admission (the
+    arrivals: list of (arrival_s, prompt, max_new_tokens, eos_id, sampling)
+    sorted by arrival time. Requests are submitted when the wall clock
+    passes their arrival offset and admitted at the next scheduler tick —
+    live slots are never re-prefilled or reset by an admission (the
     continuous-batching point), though each tick's lockstep decode does
     wait for that tick's prefills to finish first.
     """
@@ -44,8 +51,8 @@ def simulate(engine: ServeEngine, arrivals, *, quiet=False):
     while pending or engine.busy:
         now = time.perf_counter() - t0
         while pending and pending[0][0] <= now:
-            _, prompt, gen, eos = pending.pop(0)
-            engine.submit(prompt, gen, eos)
+            _, prompt, gen, eos, sampling = pending.pop(0)
+            engine.submit(prompt, gen, eos, sampling=sampling)
         if engine.busy:
             for out in engine.step():
                 outs.append(out)
@@ -72,6 +79,15 @@ def main(argv=None):
                          "0 = all requests queued at t=0")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="stop generation at this token id (-1 = never)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling threshold (1.0 = off)")
+    ap.add_argument("--seed-per-request", action="store_true",
+                    help="request i samples with seed --seed+i (independent "
+                         "reproducible streams); default: all share --seed")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of a shared prompt prefix across ALL "
                          "requests (system-prompt workload); 0 = "
@@ -115,12 +131,24 @@ def main(argv=None):
             return jax.numpy.asarray(rng.integers(0, cfg.vocab_size,
                                                   size=plen),
                                      dtype=jax.numpy.int32)
+    sampled = args.temperature > 0
+    if not sampled and (args.top_k != 0 or args.top_p != 1.0
+                        or args.seed_per_request):
+        # SamplingParams(temperature=0) is greedy and would silently drop
+        # the filters the user asked for
+        raise SystemExit("--top-k/--top-p/--seed-per-request require "
+                         "--temperature > 0 (temperature 0 is greedy)")
+    def make_sampling(rid):
+        return SamplingParams(
+            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+            seed=args.seed + rid if args.seed_per_request else args.seed)
+
     t = 0.0
     arrivals = []
-    for _ in range(args.requests):
+    for rid in range(args.requests):
         if args.rate > 0:
             t += float(rng.exponential(1.0 / args.rate))
-        arrivals.append((t, make_prompt(), args.gen, eos))
+        arrivals.append((t, make_prompt(), args.gen, eos, make_sampling(rid)))
 
     outs, wall = simulate(engine, arrivals)
     stats = engine.stats()
@@ -134,6 +162,27 @@ def main(argv=None):
           f"p95={_percentile(ttfts, 95) * 1e3:.0f}ms")
     print(f"latency p50={_percentile(lats, 50) * 1e3:.0f}ms "
           f"p95={_percentile(lats, 95) * 1e3:.0f}ms")
+    if sampled:
+        seed_desc = (f"{args.seed}+rid" if args.seed_per_request
+                     else str(args.seed))
+        print(f"sampling: temperature={args.temperature} top_k={args.top_k} "
+              f"top_p={args.top_p} seed={seed_desc} "
+              f"({stats['sampled_requests']}/{stats['requests']} requests "
+              f"sampled)")
+        # smoke gate: every served output must be non-empty and in-range,
+        # and a short probe generation must not produce NaN/Inf logits
+        # (a spot check — the engine doesn't retain per-step logits)
+        bad = [o.rid for o in outs
+               if len(o.tokens) == 0
+               or np.any(np.asarray(o.tokens) < 0)
+               or np.any(np.asarray(o.tokens) >= cfg.vocab_size)]
+        if bad:
+            raise SystemExit(f"sampled run produced empty/out-of-range "
+                             f"outputs for requests {bad}")
+        probe = generate(model, cfg, params, arrivals[0][1][None], 2,
+                         sampling=make_sampling(0))
+        if not np.all(np.isfinite(np.asarray(probe.logits_last))):
+            raise SystemExit("sampled run hit NaN/Inf logits")
     if prefix_cache is not None:
         pc = stats["prefix_cache"]
         print(f"prefix cache: {pc['hits']}/{pc['lookups']} hits, "

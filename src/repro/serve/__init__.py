@@ -2,7 +2,11 @@ from repro.serve.engine import (GenerationResult, Request, RequestOutput,
                                 ServeEngine, generate, make_serve_fns)
 from repro.serve.prefix_cache import (PrefixCache, cache_is_snapshotable,
                                       restore_into, snapshot_of_cache)
+from repro.serve.sampling import (SamplingParams, SlotSampling, request_key,
+                                  sample_step, sample_token)
 
 __all__ = ["GenerationResult", "PrefixCache", "Request", "RequestOutput",
-           "ServeEngine", "cache_is_snapshotable", "generate",
-           "make_serve_fns", "restore_into", "snapshot_of_cache"]
+           "SamplingParams", "ServeEngine", "SlotSampling",
+           "cache_is_snapshotable", "generate", "make_serve_fns",
+           "request_key", "restore_into", "sample_step", "sample_token",
+           "snapshot_of_cache"]

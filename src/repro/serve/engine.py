@@ -39,6 +39,10 @@ import numpy as np
 from repro.core.decode import broadcast_slot_caches, slot_scatter
 from repro.serve.prefix_cache import (PrefixCache, cache_is_snapshotable,
                                       restore_into, snapshot_of_cache)
+from repro.serve.sampling import (SamplingParams, device_scalars,
+                                  init_slot_keys, init_slot_sampling,
+                                  request_key, sample_step,
+                                  set_slot_sampling)
 
 
 def make_serve_fns(model, cfg):
@@ -70,32 +74,46 @@ class GenerationResult(NamedTuple):
 
 
 def generate(model, cfg, params, prompt: jax.Array, steps: int, *,
-             temperature: float = 0.0, rng=None, max_len: int | None = None):
-    """Greedy/temperature sampling loop. prompt: (B, S0) int32."""
-    prefill, decode = make_serve_fns(model, cfg)
+             temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+             seed: int = 0, sampling: SamplingParams | None = None,
+             rng=None, max_len: int | None = None):
+    """Sampling loop on the engine's fused sampler. prompt: (B, S0) int32.
+
+    Batch row r draws the PRNG stream `request_key(seed, r)` and advances
+    it by one split per emitted token, exactly like a ServeEngine slot —
+    so `generate(..., sampling=sp).tokens[0]` is bit-identical to a
+    single-slot engine run of the same `(seed, prompt, SamplingParams)`.
+    `rng` (legacy) overrides the seed-derived base key when given.
+    """
+    _, decode = make_serve_fns(model, cfg)
+    sp = sampling or SamplingParams(temperature=temperature, top_k=top_k,
+                                    top_p=top_p, seed=seed)
     bsz, s0 = prompt.shape
     max_len = max_len or (s0 + steps)
+    if s0 + steps > max_len:
+        # KV-cache families index the cache at pos and
+        # `dynamic_update_index_in_dim` CLAMPS out-of-range positions —
+        # overflow would silently corrupt the last cache slot, so reject
+        # it up front exactly like ServeEngine.submit does.
+        raise ValueError(
+            f"prompt({s0}) + steps({steps}) exceeds max_len={max_len}")
     cache = model.init_cache(params, bsz, max_len)
     batch = {"tokens": prompt}
     logits, cache, _ = model.apply(params, batch, mode="prefill", cache=cache)
     last = logits[:, -1]
-    if rng is None:
-        rng = jax.random.PRNGKey(0)
-
-    def sample(rng, logits):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+    base = rng if rng is not None else jax.random.PRNGKey(sp.seed)
+    keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(jnp.arange(bsz))
+    t, k, p, g = device_scalars(sp)
+    sample = jax.vmap(sample_step, in_axes=(0, 0, None, None, None, None))
 
     def body(carry, i):
-        rng, last, cache = carry
-        rng, sub = jax.random.split(rng)
-        tok = sample(sub, last)
+        keys, last, cache = carry
+        tok, keys = sample(keys, last, t, k, p, g)
         logits, cache = decode(params, tok[:, None], cache,
                                positions=jnp.array([s0]) + i)
-        return (rng, logits, cache), tok
+        return (keys, logits, cache), tok
 
-    (_, last, cache), toks = jax.lax.scan(body, (rng, last, cache),
+    (_, last, cache), toks = jax.lax.scan(body, (keys, last, cache),
                                           jnp.arange(steps))
     return GenerationResult(tokens=toks.T, logits_last=last)
 
@@ -107,6 +125,7 @@ class Request:
     max_new_tokens: int
     eos_id: int | None = None
     submit_time: float = 0.0
+    sampling: SamplingParams = field(default_factory=SamplingParams)
 
 
 @dataclass
@@ -141,7 +160,14 @@ class ServeEngine:
     All slots then decode lockstep through one vmapped jitted step; each
     slot stops independently on EOS or its max-new-tokens budget.
 
-    Greedy decoding only (matches `generate(temperature=0)` per request).
+    Decoding is per-request `SamplingParams` (greedy by default): the
+    stacked per-slot params and PRNG keys are engine device state, so one
+    jitted tick samples every slot with heterogeneous params — a greedy
+    request, a temperature-0.8 top-k-40 one, and a nucleus-sampled one can
+    share a batch without retracing. Tokens depend only on
+    `(seed, prompt, SamplingParams)`, never on slot placement, admission
+    order, or batch composition, and match `generate(..., sampling=sp)`
+    token-for-token.
     """
 
     def __init__(self, model, cfg, params, *, slots: int = 4,
@@ -164,11 +190,14 @@ class ServeEngine:
 
         # Device state: slot-stacked cache pytree (leading slot axis over
         # batch-1 caches; per-slot `pos` scalars become a (slots,) vector),
-        # the next token to feed each slot, and each slot's context depth.
+        # the next token to feed each slot, each slot's context depth, and
+        # the sampling state (per-slot PRNG key + stacked SamplingParams).
         slot_cache0 = init_slot(params, max_len)
         self._slot_caches = broadcast_slot_caches(slot_cache0, slots)
         self._slot_tokens = jnp.zeros((slots, 1, 1), jnp.int32)
         self._slot_pos = jnp.zeros((slots,), jnp.int32)
+        self._slot_keys = init_slot_keys(slots)
+        self._slot_samp = init_slot_sampling(slots)
 
         self.prefix_cache = prefix_cache
         if prefix_cache is not None:
@@ -183,12 +212,13 @@ class ServeEngine:
 
         def prefill_one(params, tokens):
             # tokens: (1, S) at the request's own length — no padding enters
-            # attention. Retraced per distinct prompt length.
+            # attention. Retraced per distinct prompt length. Returns the
+            # last-position logits; the first token is sampled separately
+            # (sample_first) so greedy/sampled requests share this trace.
             cache = init_slot(params, self.max_len)
             logits, cache, _ = model.apply(params, {"tokens": tokens},
                                            mode="prefill", cache=cache)
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return tok, cache
+            return logits[:, -1], cache
 
         def prefill_resume(params, tokens, cache, pos0):
             # resumed prefill: `cache` already folds the first pos0
@@ -199,18 +229,61 @@ class ServeEngine:
             logits, cache, _ = model.apply(params, {"tokens": tokens},
                                            mode="prefill", cache=cache,
                                            positions=positions)
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return tok, cache
+            return logits[:, -1], cache
 
         def restore(params, snapshot, n_tokens):
             return restore_into(init_slot(params, self.max_len), snapshot,
                                 n_tokens)
 
+        def sample_first(logits, key, temperature, top_k, top_p, greedy):
+            # logits (1, V): the request's prefill last-position logits.
+            # First split of the request's PRNG stream happens here.
+            tok, key = sample_step(key, logits[0], temperature, top_k,
+                                   top_p, greedy)
+            return tok[None], key
+
         def decode_one(params, tok, pos, cache):
             logits, cache, _ = model.apply(params, {"tokens": tok},
                                            mode="decode", cache=cache,
                                            positions=pos[None])
-            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+            return logits[0, -1], cache
+
+        def decode_all(params, toks, pos, keys, samp, caches, active):
+            # model tick for all slots, then sampling OUTSIDE the vmap so
+            # a scalar lax.cond can skip the sampler ops entirely for
+            # all-greedy batches (a vmapped cond would lower to select and
+            # run both branches) — greedy-only serving keeps the pre-
+            # sampling argmax-tick cost. Free slots' stale params are
+            # ignored by the predicate (`| ~active`): a retired sampled
+            # request must not force the sampler on a greedy drain. Greedy
+            # slots never consume their PRNG stream, so the fast path
+            # leaving keys un-split is not observable in any request's
+            # tokens.
+            logits, caches = jax.vmap(decode_one, in_axes=(None, 0, 0, 0))(
+                params, toks, pos, caches)
+
+            def all_greedy(_):
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+
+            def mixed(_):
+                return jax.vmap(sample_step)(keys, logits, samp.temperature,
+                                             samp.top_k, samp.top_p,
+                                             samp.greedy)
+
+            out, new_keys = jax.lax.cond(jnp.all(samp.greedy | ~active),
+                                         all_greedy, mixed, None)
+            # free slots decode along on stale state but their feed token,
+            # PRNG key, and position are all FROZEN here (one fused tick,
+            # no per-field host dispatch): admission rewrites the whole
+            # slot, yet a retire -> step -> admit interleaving must never
+            # observe stale-decode garbage in a free slot's state, and a
+            # long drain must never push pos past max_len (KV-cache
+            # families index their cache at pos; RoPE stays bounded)
+            new_toks = jnp.where(active[:, None, None], out[:, None, None],
+                                 toks)
+            new_keys = jnp.where(active[:, None], new_keys, keys)
+            new_pos = jnp.where(active, pos + 1, pos)
+            return out, new_toks, new_pos, new_keys, caches
 
         # The slot-stacked cache is donated on both hot paths (decode tick,
         # admission scatter) so XLA updates it in place instead of copying
@@ -219,8 +292,8 @@ class ServeEngine:
         self._prefill = jax.jit(prefill_one)
         self._prefill_resume = jax.jit(prefill_resume)
         self._restore = jax.jit(restore)
-        self._decode = jax.jit(jax.vmap(decode_one, in_axes=(None, 0, 0, 0)),
-                               donate_argnums=(3,))
+        self._sample_first = jax.jit(sample_first)
+        self._decode = jax.jit(decode_all, donate_argnums=(5,))
         self._scatter = jax.jit(slot_scatter, donate_argnums=(0,))
 
         # accounting
@@ -228,14 +301,17 @@ class ServeEngine:
         self.total_decode_s = 0.0
         self.decode_steps = 0
         self.prefills = 0
+        self.sampled_requests = 0
 
     # ------------------------------------------------------------------
     # submission / scheduling
     # ------------------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int,
-               eos_id: int | None = None) -> int:
-        """Enqueue a request; returns its id. prompt: (S,) or (1, S) int32."""
+               eos_id: int | None = None,
+               sampling: SamplingParams | None = None) -> int:
+        """Enqueue a request; returns its id. prompt: (S,) or (1, S) int32.
+        `sampling` defaults to greedy decoding."""
         prompt = jnp.asarray(prompt, jnp.int32).reshape(-1)
         if prompt.shape[0] < 1:
             raise ValueError("prompt must contain at least one token")
@@ -248,7 +324,8 @@ class ServeEngine:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, prompt, max_new_tokens, eos_id,
-                                  time.perf_counter()))
+                                  time.perf_counter(),
+                                  sampling or SamplingParams()))
         return rid
 
     @property
@@ -297,13 +374,13 @@ class ServeEngine:
             cache = self._restore(self.params, plan.snapshot,
                                   jnp.asarray(plan.n_restore, jnp.int32))
             pos = plan.n_restore
-        tok = None
+        logits = None
         for cut in plan.chunks:
             chunk = req.prompt[pos:cut][None]
             if cache is None:
-                tok, cache = self._prefill(self.params, chunk)
+                logits, cache = self._prefill(self.params, chunk)
             else:
-                tok, cache = self._prefill_resume(
+                logits, cache = self._prefill_resume(
                     self.params, chunk, cache, jnp.asarray(pos, jnp.int32))
             if cut == plan.n_promote:
                 pc.insert(plan.promote_key, cut, snapshot_of_cache(cache))
@@ -312,7 +389,7 @@ class ServeEngine:
             # the final cache's z covers exactly the block-aligned
             # truncation of the prompt (the tail sits in the buffers)
             pc.insert(plan.trunc_key, plan.n_trunc, snapshot_of_cache(cache))
-        return tok, cache
+        return logits, cache
 
     def _admit(self) -> list[RequestOutput]:
         """Fill free slots from the queue (FIFO). Prefill is per-request at
@@ -326,18 +403,28 @@ class ServeEngine:
             req = self.queue.popleft()
             t0 = time.perf_counter()
             if self.prefix_cache is not None:
-                tok, cache = self._prefill_cached(req)
+                logits, cache = self._prefill_cached(req)
             else:
-                tok, cache = self._prefill(self.params, req.prompt[None])
+                logits, cache = self._prefill(self.params, req.prompt[None])
+            # first token: sampled from the prefill logits with the
+            # request's own PRNG stream (request_key(seed) — independent of
+            # the slot index, so placement never changes the tokens)
+            tok, key = self._sample_first(logits, request_key(req.sampling.seed),
+                                          *device_scalars(req.sampling))
             tok = jax.block_until_ready(tok)
             self.total_prefill_s += time.perf_counter() - t0
             self.prefills += 1
+            if not req.sampling.is_greedy:
+                self.sampled_requests += 1
 
             s0 = req.prompt.shape[0]
             self._slot_caches = self._scatter(
                 self._slot_caches, cache, jnp.asarray(si, jnp.int32))
             self._slot_tokens = self._slot_tokens.at[si, 0, 0].set(tok[0])
             self._slot_pos = self._slot_pos.at[si].set(s0)
+            self._slot_keys = self._slot_keys.at[si].set(key)
+            self._slot_samp = set_slot_sampling(self._slot_samp, si,
+                                                req.sampling)
 
             slot.request = req
             slot.emitted = [int(tok[0])]
@@ -355,21 +442,17 @@ class ServeEngine:
             return done
         active = np.array([not s.free for s in self._slots])
         t0 = time.perf_counter()
-        toks, self._slot_caches = self._decode(
-            self.params, self._slot_tokens, self._slot_pos, self._slot_caches)
-        host_toks = np.asarray(toks)          # (slots, 1) — syncs the step
+        (toks, self._slot_tokens, self._slot_pos, self._slot_keys,
+         self._slot_caches) = self._decode(
+            self.params, self._slot_tokens, self._slot_pos, self._slot_keys,
+            self._slot_samp, self._slot_caches, jnp.asarray(active))
+        host_toks = np.asarray(toks)          # (slots,) — syncs the step
         self.total_decode_s += time.perf_counter() - t0
         self.decode_steps += 1
-        self._slot_tokens = toks[:, :, None]
-        # free slots decode along on stale state but their position is
-        # FROZEN: a long drain must never push pos past max_len (KV-cache
-        # families index their cache at pos; RoPE angles stay bounded)
-        self._slot_pos = jnp.where(jnp.asarray(active),
-                                   self._slot_pos + 1, self._slot_pos)
         for si, slot in enumerate(self._slots):
             if slot.free:
                 continue
-            slot.emitted.append(int(host_toks[si, 0]))
+            slot.emitted.append(int(host_toks[si]))
             fin = self._check_finished(si)
             if fin is not None:
                 done.append(fin)
@@ -392,19 +475,27 @@ class ServeEngine:
         """Zero the accounting (e.g. after a compile warm-up run)."""
         self.finished = []
         self.total_prefill_s = self.total_decode_s = 0.0
-        self.decode_steps = self.prefills = 0
+        self.decode_steps = self.prefills = self.sampled_requests = 0
         if self.prefix_cache is not None:
             self.prefix_cache.reset_stats()
 
     def stats(self) -> dict:
-        gen_tokens = sum(len(o.tokens) for o in self.finished)
-        # first token of every request comes from the prefill argmax, so
+        # still-resident requests count too: total_decode_s includes the
+        # ticks spent on live slots, so summing only self.finished would
+        # bias mid-drain throughput low
+        live = [s for s in self._slots if not s.free]
+        gen_tokens = (sum(len(o.tokens) for o in self.finished)
+                      + sum(len(s.emitted) for s in live))
+        # first token of every request comes from the prefill logits, so
         # decode throughput counts only decode-step-produced tokens
-        decode_tokens = sum(o.decode_steps for o in self.finished)
+        decode_tokens = (sum(o.decode_steps for o in self.finished)
+                         + sum(len(s.emitted) - 1 for s in live))
         out = {
             "requests": len(self.finished),
+            "active_requests": len(live),
             "generated_tokens": gen_tokens,
             "prefills": self.prefills,
+            "sampled_requests": self.sampled_requests,
             "decode_steps": self.decode_steps,
             "prefill_s": self.total_prefill_s,
             "decode_s": self.total_decode_s,

@@ -1,0 +1,186 @@
+"""Sampler determinism contract: for fixed (seed, prompt, SamplingParams)
+the emitted tokens are bit-identical across `generate` vs a single-slot
+engine, slot placement, admission order, and co-resident batch composition
+(mixed greedy + sampled). Plus the filter equivalences top_k=1 == greedy
+and top_p=1.0 == pure temperature, and unit-level mask correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (SamplingParams, ServeEngine, generate, request_key,
+                         sample_step, sample_token)
+
+
+def _setup(seed=0, **overrides):
+    cfg = get_config("gpt2s-polysketch", smoke=True)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    return model, cfg, params
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, n), jnp.int32)
+
+
+def _engine_tokens(model, cfg, params, reqs, *, slots, max_len=64):
+    """reqs: list of (prompt, steps, sampling). Returns {rid: tokens}."""
+    eng = ServeEngine(model, cfg, params, slots=slots, max_len=max_len)
+    for p, n, sp in reqs:
+        eng.submit(p, n, sampling=sp)
+    return {o.rid: o.tokens for o in eng.run()}
+
+
+SAMPLED = SamplingParams(temperature=0.8, top_k=12, top_p=0.9, seed=7)
+
+
+@pytest.mark.parametrize("sp", [
+    SamplingParams(temperature=0.7, seed=3),
+    SamplingParams(temperature=1.1, top_k=5, seed=11),
+    SAMPLED,
+])
+def test_generate_matches_single_slot_engine(sp):
+    """generate(..., sampling=sp) row 0 is bit-identical to a one-slot
+    engine run of the same (seed, prompt, SamplingParams)."""
+    model, cfg, params = _setup()
+    p, steps = _prompt(cfg, 9), 10
+    want = np.asarray(generate(model, cfg, params, p[None], steps,
+                               sampling=sp).tokens[0])
+    got = _engine_tokens(model, cfg, params, [(p, steps, sp)], slots=1)[0]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_generate_kwargs_match_sampling_params():
+    """The flat kwargs spelling is the same request as SamplingParams."""
+    model, cfg, params = _setup()
+    p = _prompt(cfg, 6)
+    a = generate(model, cfg, params, p[None], 8, temperature=0.8, top_k=12,
+                 top_p=0.9, seed=7).tokens
+    b = generate(model, cfg, params, p[None], 8, sampling=SAMPLED).tokens
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slot_placement_does_not_change_tokens():
+    """The same request emits the same tokens from slot 0 (alone) and from
+    slot 3 (admitted after three co-resident greedy fillers)."""
+    model, cfg, params = _setup(seed=1)
+    target = (_prompt(cfg, 8, seed=2), 8, SAMPLED)
+    solo = _engine_tokens(model, cfg, params, [target], slots=4)[0]
+    fillers = [(_prompt(cfg, 5 + i, seed=20 + i), 12, SamplingParams())
+               for i in range(3)]
+    crowded = _engine_tokens(model, cfg, params, fillers + [target], slots=4)
+    np.testing.assert_array_equal(crowded[3], solo)
+
+
+def test_admission_order_invariance():
+    """Two sampled requests emit identical tokens whichever is submitted
+    first (streams are per-request, never shared engine state)."""
+    model, cfg, params = _setup(seed=2)
+    a = (_prompt(cfg, 7, seed=5), 8, SamplingParams(temperature=0.9, seed=1))
+    b = (_prompt(cfg, 11, seed=6), 8, SamplingParams(temperature=0.9, seed=2))
+    ab = _engine_tokens(model, cfg, params, [a, b], slots=2)
+    ba = _engine_tokens(model, cfg, params, [b, a], slots=2)
+    np.testing.assert_array_equal(ab[0], ba[1])   # request a
+    np.testing.assert_array_equal(ab[1], ba[0])   # request b
+
+
+def test_mixed_greedy_and_sampled_no_cross_contamination():
+    """Greedy and sampled requests sharing one decode batch each match
+    their solo runs — heterogeneous params in one jitted tick, and no slot
+    reads another slot's PRNG stream."""
+    model, cfg, params = _setup(seed=3)
+    pg, ps = _prompt(cfg, 6, seed=8), _prompt(cfg, 13, seed=9)
+    greedy_solo = np.asarray(generate(model, cfg, params, pg[None], 8)
+                             .tokens[0])
+    sampled_solo = _engine_tokens(model, cfg, params,
+                                  [(ps, 8, SAMPLED)], slots=1)[0]
+    mixed = _engine_tokens(model, cfg, params,
+                           [(pg, 8, SamplingParams()), (ps, 8, SAMPLED)],
+                           slots=2)
+    np.testing.assert_array_equal(mixed[0], greedy_solo)
+    np.testing.assert_array_equal(mixed[1], sampled_solo)
+
+
+def test_top_k_one_equals_greedy():
+    model, cfg, params = _setup(seed=4)
+    p = _prompt(cfg, 10, seed=10)
+    greedy = np.asarray(generate(model, cfg, params, p[None], 10).tokens[0])
+    k1 = np.asarray(generate(
+        model, cfg, params, p[None], 10,
+        sampling=SamplingParams(temperature=1.3, top_k=1, seed=5)).tokens[0])
+    np.testing.assert_array_equal(k1, greedy)
+
+
+def test_top_p_one_equals_pure_temperature():
+    """top_p=1.0 (and top_k=0) is an exact no-op: the scan must emit the
+    same bits as a hand-rolled categorical(key, logits/t) loop with the
+    same key schedule."""
+    model, cfg, params = _setup(seed=5)
+    p, steps, t, seed = _prompt(cfg, 7, seed=12), 8, 0.85, 13
+    got = np.asarray(generate(
+        model, cfg, params, p[None], steps,
+        sampling=SamplingParams(temperature=t, seed=seed)).tokens[0])
+
+    # reference: raw categorical over temperature-scaled logits
+    s0 = p.shape[0]
+    cache = model.init_cache(params, 1, s0 + steps)
+    logits, cache, _ = model.apply(params, {"tokens": p[None]},
+                                   mode="prefill", cache=cache)
+    last = logits[:, -1]
+    key = request_key(seed)
+    want = []
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(
+            sub, last[0].astype(jnp.float32) / t).astype(jnp.int32)
+        want.append(int(tok))
+        logits, cache, _ = model.apply(
+            params, {"tokens": tok[None, None]}, mode="decode", cache=cache,
+            positions=jnp.array([s0 + i]))
+        last = logits[:, -1]
+    np.testing.assert_array_equal(got, np.asarray(want, np.int32))
+
+
+def test_sample_token_respects_top_k_and_top_p():
+    """Unit: over many keys, every draw stays inside the top-k set / the
+    nucleus; the masked distribution is otherwise untouched."""
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=64), jnp.float32)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(500))
+    t = jnp.asarray(1.0, jnp.float32)
+    off_k, off_p = jnp.asarray(0, jnp.int32), jnp.asarray(1.0, jnp.float32)
+    not_greedy = jnp.asarray(False)
+
+    topk_set = set(np.argsort(np.asarray(logits))[-8:].tolist())
+    toks = jax.vmap(sample_token, in_axes=(0, None, None, None, None, None))(
+        keys, logits, t, jnp.asarray(8, jnp.int32), off_p, not_greedy)
+    assert set(np.asarray(toks).tolist()) <= topk_set
+
+    probs = np.asarray(jax.nn.softmax(logits))
+    order = np.argsort(-probs)
+    cum_excl = np.cumsum(probs[order]) - probs[order]
+    nucleus = set(order[cum_excl < 0.5].tolist())
+    toks = jax.vmap(sample_token, in_axes=(0, None, None, None, None, None))(
+        keys, logits, t, off_k, jnp.asarray(0.5, jnp.float32), not_greedy)
+    assert set(np.asarray(toks).tolist()) <= nucleus
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError):
+        SamplingParams(greedy=False)   # temperature 0 can't sample
+    assert SamplingParams().is_greedy
+    assert not SamplingParams(temperature=0.5).is_greedy
+    assert SamplingParams(temperature=0.5, greedy=True).is_greedy

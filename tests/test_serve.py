@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine, generate
+from repro.serve import SamplingParams, ServeEngine, generate
 
 
 def _setup(seed=0, **overrides):
@@ -155,6 +155,76 @@ def test_submit_rejects_invalid_requests():
         eng.submit(jnp.zeros((0,), jnp.int32), 4)    # empty prompt
     with pytest.raises(ValueError):
         eng.submit(jnp.zeros((4,), jnp.int32), 0)    # no token budget
+
+
+def test_stats_count_live_slots_mid_run():
+    """Regression: stats() must count tokens emitted by requests still
+    resident in a slot — total_decode_s includes their ticks, so counting
+    only self.finished biased mid-drain throughput low."""
+    model, cfg, params = _setup()
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=32)
+    eng.submit(_prompts(cfg, [6])[0], 8)
+    for _ in range(3):    # each step: (admit at step 1) + one decode tick
+        eng.step()
+    st = eng.stats()
+    assert not eng._slots[0].free and st["requests"] == 0
+    assert st["active_requests"] == 1
+    assert st["generated_tokens"] == 4   # prefill token + 3 decode ticks
+    assert st["decode_tok_per_s"] > 0
+    # draining moves the same tokens from live to finished, never drops any
+    eng.run()
+    st = eng.stats()
+    assert st["requests"] == 1 and st["active_requests"] == 0
+    assert st["generated_tokens"] == 8
+
+
+@pytest.mark.parametrize("overrides", [
+    dict(),                                            # polysketch cache
+    dict(block_pattern=("local_attn",), sliding_window=8),  # kv_ring cache
+])
+def test_generate_rejects_max_len_overflow(overrides):
+    """Regression: generate() must reject s0 + steps > max_len like
+    ServeEngine.submit — KV-cache families' `dynamic_update_index_in_dim`
+    would silently clamp and corrupt the last cache slot instead."""
+    model, cfg, params = _setup(seed=5, **overrides)
+    prompt = _prompts(cfg, [10], seed=5)[0][None]
+    with pytest.raises(ValueError, match="max_len"):
+        generate(model, cfg, params, prompt, 8, max_len=12)
+    # the boundary itself is fine
+    generate(model, cfg, params, prompt, 2, max_len=12)
+
+
+def test_free_slot_tokens_preserved_between_retire_and_admit():
+    """Regression: a free slot's feed token must survive decode ticks —
+    the stale-state decode's output is garbage, and a retire -> step ->
+    admit interleaving must never observe it in `_slot_tokens`."""
+    model, cfg, params = _setup(seed=7)
+    prompts = _prompts(cfg, [5, 9, 14], seed=7)
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=48)
+    eng.submit(prompts[0], 2)          # retires quickly
+    # the survivor is SAMPLED so the tick takes the mixed (key-splitting)
+    # path — the all-greedy fast path would trivially preserve keys
+    eng.submit(prompts[1], 12, sampling=SamplingParams(temperature=0.7,
+                                                       seed=3))
+    eng.step()                         # admit both + first decode tick
+    assert not eng._slots[1].free
+    while not eng._slots[0].free:
+        eng.step()
+    # sentinel the free slot's state: no decode output can ever equal it,
+    # so any overwrite by the stale-state decode is caught deterministically
+    eng._slot_tokens = eng._slot_tokens.at[0, 0, 0].set(-1)
+    eng._slot_keys = eng._slot_keys.at[0].set(
+        jnp.asarray([0xDEAD, 0xBEEF], jnp.uint32))
+    for _ in range(3):                 # retire -> step (slot 0 stays free)
+        eng.step()
+    assert int(np.asarray(eng._slot_tokens)[0, 0, 0]) == -1
+    np.testing.assert_array_equal(np.asarray(eng._slot_keys)[0],
+                                  np.asarray([0xDEAD, 0xBEEF], np.uint32))
+    # -> admit: the late request still bit-matches its solo run
+    eng.submit(prompts[2], 6)
+    outs = {o.rid: o for o in eng.run()}
+    np.testing.assert_array_equal(
+        outs[2].tokens, _ref_tokens(model, cfg, params, prompts[2], 6))
 
 
 def test_engine_accounting():
