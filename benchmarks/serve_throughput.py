@@ -84,7 +84,7 @@ def _interleaved_tick_us(eng, snaps, *, rounds):
     for _ in range(rounds):
         for label, (tokens, pos, keys, samp, caches) in snaps.items():
             t0 = time.perf_counter()
-            out, tokens, pos, keys, caches = eng._decode(
+            out, _, tokens, pos, keys, caches = eng._decode(
                 eng.params, tokens, pos, keys, samp, caches, all_active)
             jax.block_until_ready(out)
             times[label].append(time.perf_counter() - t0)

@@ -94,6 +94,20 @@ def polysketch_decode_step(cache: PolysketchCache, qm, km, q, k, v, *,
     return out.astype(v.dtype), new_cache
 
 
+class RecurrentCache(NamedTuple):
+    """Constant-size recurrent decode state (SSM / RG-LRU mixers).
+
+    Unlike PolysketchCache there is no partial-block buffer: `h` is the
+    exact state after every token consumed so far, so a snapshot is valid
+    at ANY position (token granularity) — but only bit-reproducible at the
+    lt_block_size chunk grid the prefill scan runs on (see models/ssm.py).
+    Position is tracked by the caller (the serve engine's per-slot pos);
+    the node itself is position-free.
+    """
+    h: jax.Array     # (B, ...) f32 recurrent state (SSD: (B,H,N,P); RG-LRU: (B,W))
+    conv: jax.Array  # (B, K-1, C) trailing conv inputs
+
+
 class KVCache(NamedTuple):
     k: jax.Array    # (B, Hkv, S_max, h)
     v: jax.Array    # (B, Hkv, S_max, h)

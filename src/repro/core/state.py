@@ -1,0 +1,382 @@
+"""DecodeState protocol: a family-agnostic cache/prefill/snapshot API.
+
+PolySketchFormer's serving story rests on one property: the decode state is
+constant-size in context length (the r^2 x (h+1) sketch prefix state). But
+that property is not unique to polysketch — SSM / RG-LRU recurrent states
+are constant-size too, and even the O(n)/O(W) KV caches share the same
+*lifecycle* (init, prefill, decode step, slot stacking). This module makes
+that lifecycle a first-class protocol so the serve engine, `generate`, and
+the prefix cache never branch on model family or mechanism name:
+
+  - ``StateSpec`` (registry, keyed by state *kind*): one entry per decode
+    state kind — ``polysketch``, ``kv_full``, ``poly_kv``, ``kv_ring``,
+    ``ssd``, ``rglru`` — declaring how to build the per-layer cache node
+    and what it supports (snapshot granularity, resumable prefill). Core
+    registers the attention-state kinds below; ``models/ssm.py`` and
+    ``models/rglru.py`` register the recurrent kinds on import (the specs
+    need their cfg-specific shapes).
+
+  - Node-level snapshot ops, keyed by cache-node *type* (PolysketchCache /
+    RecurrentCache / KVCache): ``snapshot_state`` / ``restore_state`` walk
+    any model cache pytree and dispatch per node, so a hybrid model's
+    cache snapshots correctly with zero model-specific code.
+
+  - ``DecodeState``: the model-level facade (built by ``model_zoo``)
+    exposing ``init / init_slot / prefill / resume / decode_step /
+    snapshot / restore / serialize / deserialize`` plus the slot helpers.
+    Everything the serve stack needs, independent of family.
+
+Snapshot granularity semantics (per kind, composed over a model's kinds):
+
+  - ``"block"``  — a snapshot of the post-prefill state is valid at the
+    last lt_block_size boundary: the partial tail lives in a buffer the
+    snapshot simply omits (polysketch).
+  - ``"token"`` — the state covers exactly the tokens prefilled so far
+    (no tail buffer), so taking a snapshot at a block boundary requires
+    *splitting* the prefill there (SSM / RG-LRU). Snapshots are only
+    bit-reproducible at the lt_block_size chunk grid the recurrent
+    prefill scans over.
+  - ``None``    — no constant-size snapshot exists (ring / full KV).
+
+A model mixing kinds gets the weakest member: any ``None`` disables
+snapshots; any ``"token"`` member forces the split-at-boundary behavior.
+"""
+from __future__ import annotations
+
+import io
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decode as dec
+
+
+# ---------------------------------------------------------------------------
+# node-level snapshot ops (dispatch by cache-node type)
+# ---------------------------------------------------------------------------
+
+class NodeOps(NamedTuple):
+    granularity: str | None          # "block" | "token" | None
+    snapshot: Callable | None        # node -> constant-size snapshot pytree
+    restore: Callable | None         # (fresh_node, snapshot, n_tokens) -> node
+
+
+def _psk_snapshot(node: dec.PolysketchCache):
+    # valid at block-aligned positions, where the buffers are empty by
+    # construction: the folded prefix state is the whole story
+    return node.z
+
+
+def _psk_restore(fresh: dec.PolysketchCache, z, n_tokens):
+    pos = jnp.broadcast_to(jnp.asarray(n_tokens, fresh.pos.dtype),
+                           fresh.pos.shape)
+    return fresh._replace(z=z.astype(fresh.z.dtype), pos=pos)
+
+
+def _rec_snapshot(node: dec.RecurrentCache):
+    # the whole node is constant-size; h covers exactly pos tokens
+    return node
+
+
+def _rec_restore(fresh: dec.RecurrentCache, snap: dec.RecurrentCache,
+                 n_tokens):
+    del n_tokens  # position lives with the caller, not the node
+    return dec.RecurrentCache(h=snap.h.astype(fresh.h.dtype),
+                              conv=snap.conv.astype(fresh.conv.dtype))
+
+
+NODE_OPS: dict[type, NodeOps] = {
+    dec.PolysketchCache: NodeOps("block", _psk_snapshot, _psk_restore),
+    dec.RecurrentCache: NodeOps("token", _rec_snapshot, _rec_restore),
+    dec.KVCache: NodeOps(None, None, None),
+}
+
+_NODE_TYPES = tuple(NODE_OPS)
+
+
+def is_state_node(x) -> bool:
+    return isinstance(x, _NODE_TYPES)
+
+
+def snapshot_state(state):
+    """Constant-size snapshot of a model cache pytree (per-node dispatch).
+
+    Raises for node types with no snapshot support (KV caches)."""
+    def snap(node):
+        ops = NODE_OPS[type(node)]
+        if ops.snapshot is None:
+            raise ValueError(
+                f"{type(node).__name__} decode state does not support "
+                "constant-size snapshots")
+        return ops.snapshot(node)
+    return jax.tree_util.tree_map(snap, state, is_leaf=is_state_node)
+
+
+def restore_state(fresh_state, snapshot, n_tokens):
+    """Rebuild a cache pytree from a snapshot; `fresh_state` supplies the
+    structure/zeros, `n_tokens` the restored position (block-aligned for
+    block-granularity nodes)."""
+    def rest(node, snap):
+        return NODE_OPS[type(node)].restore(node, snap, n_tokens)
+    return jax.tree_util.tree_map(rest, fresh_state, snapshot,
+                                  is_leaf=is_state_node)
+
+
+# ---------------------------------------------------------------------------
+# the kind registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StateSpec:
+    """One decode-state kind: how to build it and what it supports."""
+    kind: str
+    node_type: type
+    granularity: str | None     # see module docstring
+    resumable: bool             # prefill can continue from a prior state
+    init: Callable              # (cfg, batch, max_len, dtype) -> cache node
+
+
+REGISTRY: dict[str, StateSpec] = {}
+
+
+def register_state(spec: StateSpec) -> StateSpec:
+    REGISTRY[spec.kind] = spec
+    return spec
+
+
+def get_spec(kind: str) -> StateSpec:
+    if kind not in REGISTRY:
+        raise KeyError(f"unknown decode-state kind {kind!r}; "
+                       f"registered: {sorted(REGISTRY)}")
+    return REGISTRY[kind]
+
+
+register_state(StateSpec(
+    kind="polysketch", node_type=dec.PolysketchCache,
+    granularity="block", resumable=True,
+    init=lambda cfg, batch, max_len, dtype: dec.init_polysketch_cache(
+        batch, cfg.n_kv_heads, cfg.resolved_head_dim, cfg.sketch_size,
+        cfg.lt_block_size, dtype)))
+
+register_state(StateSpec(
+    kind="kv_full", node_type=dec.KVCache,
+    granularity=None, resumable=False,
+    init=lambda cfg, batch, max_len, dtype: dec.init_kv_cache(
+        batch, cfg.n_kv_heads, cfg.resolved_head_dim, max_len, dtype)))
+
+register_state(StateSpec(
+    kind="poly_kv", node_type=dec.KVCache,
+    granularity=None, resumable=False,
+    init=lambda cfg, batch, max_len, dtype: dec.init_kv_cache(
+        batch, cfg.n_kv_heads, cfg.resolved_head_dim, max_len, dtype)))
+
+register_state(StateSpec(
+    kind="kv_ring", node_type=dec.KVCache,
+    granularity=None, resumable=False,
+    init=lambda cfg, batch, max_len, dtype: dec.init_kv_cache(
+        batch, cfg.n_kv_heads, cfg.resolved_head_dim,
+        min(cfg.sliding_window, max_len), dtype)))
+
+
+def mixer_state_kind(cfg, mixer: str) -> str:
+    """The decode-state kind a mixer contributes under this config."""
+    if mixer == "attn":
+        return {"polysketch": "polysketch", "polynomial": "poly_kv",
+                "softmax": "kv_full"}[cfg.attention]
+    if mixer == "local_attn":
+        return "kv_ring"
+    if mixer in ("rglru", "ssd"):
+        return mixer
+    raise ValueError(f"unknown mixer kind {mixer!r}")
+
+
+def state_kinds(cfg) -> tuple[str, ...]:
+    """Distinct decode-state kinds of a config's block pattern (ordered)."""
+    return tuple(dict.fromkeys(
+        mixer_state_kind(cfg, m) for m in cfg.block_pattern))
+
+
+def composite_granularity(kinds) -> str | None:
+    """Weakest-member snapshot granularity over a model's state kinds."""
+    gs = [get_spec(k).granularity for k in kinds]
+    if not gs or any(g is None for g in gs):
+        return None
+    return "block" if all(g == "block" for g in gs) else "token"
+
+
+# ---------------------------------------------------------------------------
+# snapshot (de)serialization — on-disk persistence seam
+# ---------------------------------------------------------------------------
+
+def serialize_snapshot(snapshot, n_tokens: int) -> bytes:
+    """Pickle-free encoding: npz of the snapshot's leaves + the position.
+
+    The tree structure is NOT stored — the reader supplies it (the model
+    that wrote a snapshot is the only model that can read it, which is
+    also enforced by the params fingerprint in serve/prefix_cache.py)."""
+    import numpy as np
+    buf = io.BytesIO()
+    leaves = jax.tree_util.tree_leaves(snapshot)
+    np.savez(buf, n_tokens=np.int64(n_tokens),
+             **{f"leaf{i}": np.asarray(x) for i, x in enumerate(leaves)})
+    return buf.getvalue()
+
+
+def deserialize_snapshot(data: bytes, treedef):
+    """Inverse of serialize_snapshot; returns (snapshot, n_tokens)."""
+    import numpy as np
+    with np.load(io.BytesIO(data)) as z:
+        n = int(z["n_tokens"])
+        leaves = [jnp.asarray(z[f"leaf{i}"]) for i in range(len(z) - 1)]
+    return jax.tree_util.tree_unflatten(treedef, leaves), n
+
+
+# ---------------------------------------------------------------------------
+# resumed-prefill bucketing
+# ---------------------------------------------------------------------------
+
+def bucket_chunks(pos0: int, end: int, block_size: int) -> list[int]:
+    """Split [pos0, end) into power-of-two multiples of block_size (largest
+    first) plus one final sub-block tail; returns the absolute cut points
+    (ascending, last == end).
+
+    Every intermediate cut is block-aligned when pos0 is (the resume
+    contract for block-granularity states), and the set of possible chunk
+    lengths over ANY workload is {block_size * 2^i} plus the < block_size
+    tails — so a jitted per-chunk-length prefill compiles O(log(max_len) +
+    block_size) traces instead of one per distinct suffix length."""
+    if end <= pos0:
+        return []
+    m, t = divmod(end - pos0, block_size)
+    cuts, pos = [], pos0
+    while m:
+        p = 1 << (m.bit_length() - 1)
+        pos += p * block_size
+        cuts.append(pos)
+        m -= p
+    if t:
+        cuts.append(end)
+    return cuts
+
+
+# ---------------------------------------------------------------------------
+# the model-level facade
+# ---------------------------------------------------------------------------
+
+class DecodeState:
+    """Uniform decode-state surface for one (cfg, apply) pair.
+
+    Everything the serve stack touches goes through here: the engine,
+    `generate`, and the prefix cache are written against this class and
+    never inspect cfg.family / cfg.attention / mixer kinds themselves.
+    All tensor-returning methods are pure and jit-friendly (the engine
+    jits thin wrappers around them).
+    """
+
+    def __init__(self, cfg, apply_fn, init_fn, init_slot_fn=None):
+        self.cfg = cfg
+        self.kinds = state_kinds(cfg)
+        self._apply = apply_fn
+        self._init = init_fn
+        self._init_slot = init_slot_fn
+        self._snap_treedef = None
+
+    # -- capabilities ------------------------------------------------------
+
+    @property
+    def block_size(self) -> int:
+        """Snapshot / resumed-prefill grid (multiples of lt_block_size)."""
+        return self.cfg.lt_block_size
+
+    @property
+    def snapshot_granularity(self) -> str | None:
+        return composite_granularity(self.kinds)
+
+    @property
+    def resumable(self) -> bool:
+        return all(get_spec(k).resumable for k in self.kinds)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def init(self, params, batch: int, max_len: int):
+        return self._init(params, batch, max_len)
+
+    def init_slot(self, params, max_len: int):
+        """Batch-1 cache with per-slot scalar positions (serving)."""
+        if self._init_slot is not None:
+            return self._init_slot(params, max_len)
+        return self._init(params, 1, max_len)
+
+    def prefill(self, params, tokens, state=None, *, max_len=None):
+        """tokens (B, S) -> (last-position logits (B, V), state).
+
+        Pass a pre-built `state` or `max_len`: KV-cache kinds size their
+        buffers at init, and a cache sized to the prompt alone has no
+        decode headroom — `dynamic_update_index_in_dim` would silently
+        clamp the first decode write onto the last slot."""
+        if state is None:
+            if max_len is None:
+                raise ValueError(
+                    "prefill needs max_len (or a pre-built state): a cache "
+                    "sized to the prompt length leaves no decode headroom")
+            state = self.init(params, tokens.shape[0], max_len)
+        logits, state, _ = self._apply(params, {"tokens": tokens},
+                                       mode="prefill", cache=state)
+        return logits[:, -1], state
+
+    def resume(self, params, tokens, state, pos0):
+        """Continue a prefill: `state` already covers the first pos0 tokens
+        (block-aligned for block-granularity kinds); this chunk attends
+        through it and positions run at the true absolute offsets."""
+        positions = jnp.asarray(pos0, jnp.int32) + jnp.arange(tokens.shape[1])
+        logits, state, _ = self._apply(params, {"tokens": tokens},
+                                       mode="prefill", cache=state,
+                                       positions=positions)
+        return logits[:, -1], state
+
+    def decode_step(self, params, tok, pos, state):
+        """tok (B, 1) at position `pos` (scalar; shared across the batch)
+        -> (logits (B, V), state)."""
+        positions = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,))[:1]
+        logits, state, _ = self._apply(params, {"tokens": tok},
+                                       mode="decode", cache=state,
+                                       positions=positions)
+        return logits[:, -1], state
+
+    # -- snapshots ---------------------------------------------------------
+
+    def snapshot(self, state):
+        if self.snapshot_granularity is None:
+            raise ValueError(
+                f"decode state of {self.cfg.name!r} (kinds: "
+                f"{'/'.join(self.kinds)}) has no constant-size snapshot")
+        return snapshot_state(state)
+
+    def restore(self, fresh_state, snapshot, n_tokens):
+        return restore_state(fresh_state, snapshot, n_tokens)
+
+    def serialize(self, snapshot, n_tokens: int) -> bytes:
+        return serialize_snapshot(snapshot, n_tokens)
+
+    def deserialize(self, data: bytes):
+        if self._snap_treedef is None:
+            # structure probe: params are never read by cache init
+            probe = self.snapshot(self.init_slot(None, self.block_size))
+            self._snap_treedef = jax.tree_util.tree_structure(probe)
+        return deserialize_snapshot(data, self._snap_treedef)
+
+    # -- slot stacking (continuous batching) -------------------------------
+
+    @staticmethod
+    def broadcast_slots(state, slots: int):
+        return dec.broadcast_slot_caches(state, slots)
+
+    @staticmethod
+    def slot_scatter(slot_states, state, slot):
+        return dec.slot_scatter(slot_states, state, slot)
+
+    @staticmethod
+    def slot_gather(slot_states, slot):
+        return dec.slot_gather(slot_states, slot)

@@ -95,19 +95,42 @@ def main(argv=None):
     ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
                     help="prefix-reuse snapshot cache byte budget in MiB "
                          "(0 = cache off)")
+    ap.add_argument("--prefix-cache-dir", default=None,
+                    help="persist prefix-cache snapshots under this "
+                         "directory (survives restarts; shareable)")
+    ap.add_argument("--min-snapshot-blocks", type=int, default=1,
+                    help="prefix-cache admission floor: only snapshot "
+                         "prefixes of at least this many blocks")
+    ap.add_argument("--expect-disk-hits", action="store_true",
+                    help="exit nonzero unless at least one snapshot was "
+                         "loaded from --prefix-cache-dir (restart smoke)")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="override cfg.lt_block_size (the snapshot / "
+                         "resumed-prefill grid); 0 = config default")
+    ap.add_argument("--logprobs", action="store_true",
+                    help="report per-token logprobs of the sampled tokens "
+                         "(computed inside the jitted decode tick)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
+    overrides = {"lt_block_size": args.block_size} if args.block_size else {}
+    cfg = get_config(args.arch, smoke=args.smoke, **overrides)
     model = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
     params, _ = model.init(key)
 
-    prefix_cache = (PrefixCache(int(args.prefix_cache_mb * 2 ** 20))
+    prefix_cache = (PrefixCache(int(args.prefix_cache_mb * 2 ** 20),
+                                save_dir=args.prefix_cache_dir)
                     if args.prefix_cache_mb > 0 else None)
+    if args.expect_disk_hits and (prefix_cache is None
+                                  or args.prefix_cache_dir is None):
+        raise SystemExit("--expect-disk-hits needs --prefix-cache-mb and "
+                         "--prefix-cache-dir")
     engine = ServeEngine(model, cfg, params, slots=args.slots,
                          max_len=args.prompt_len + args.gen,
-                         prefix_cache=prefix_cache)
+                         prefix_cache=prefix_cache,
+                         min_snapshot_blocks=args.min_snapshot_blocks,
+                         logprobs=args.logprobs)
     rng = np.random.default_rng(args.seed)
 
     eos = None if args.eos_id < 0 else args.eos_id
@@ -183,18 +206,29 @@ def main(argv=None):
                          sampling=make_sampling(0))
         if not np.all(np.isfinite(np.asarray(probe.logits_last))):
             raise SystemExit("sampled run hit NaN/Inf logits")
+    if args.logprobs:
+        lps = np.concatenate([o.logprobs for o in outs if o.logprobs is not None])
+        print(f"logprobs: mean={lps.mean():.3f} min={lps.min():.3f} "
+              f"({lps.size} tokens)")
+        if not (np.all(np.isfinite(lps)) and np.all(lps <= 0.0)):
+            raise SystemExit("logprobs outside (-inf, 0] — sampler/model "
+                             "distribution mismatch")
     if prefix_cache is not None:
         pc = stats["prefix_cache"]
         print(f"prefix cache: {pc['hits']}/{pc['lookups']} hits, "
               f"{pc['hit_tokens']} prompt tokens restored, "
               f"{pc['entries']} entries / {pc['bytes'] / 2**20:.2f} MiB "
-              f"({pc['evictions']} evictions)")
+              f"({pc['evictions']} evictions, {pc['disk_loads']} disk "
+              f"loads, {pc['disk_writes']} disk writes)")
         if (args.shared_prefix >= cfg.lt_block_size and args.requests >= 3
                 and pc["hits"] == 0):
             # requests 3+ of a shared-prefix workload must hit (req 2
             # promotes the shared boundary) — a zero here is a regression
             raise SystemExit("prefix cache: expected hits in shared-prefix "
                              "workload, got none")
+        if args.expect_disk_hits and pc["disk_loads"] == 0:
+            raise SystemExit("prefix cache: expected disk loads from "
+                             f"{args.prefix_cache_dir}, got none")
     return outs
 
 

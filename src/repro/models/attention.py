@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import decode as dec
+from repro.core import state as st
 from repro.core.linear_attention import noncausal_linear_attention
 from repro.core.poly_attention import (qk_layernorm, sliding_attention_blocked,
                                         softmax_attention_full)
@@ -88,20 +89,13 @@ def _out(params, y):
 
 
 def init_cache(params, cfg, kind: str, batch: int, max_len: int, dtype):
-    hq, hkv = cfg.n_heads, cfg.n_kv_heads
-    hd = cfg.resolved_head_dim
-    if kind == "attn" and cfg.attention == "polysketch":
-        return dec.init_polysketch_cache(batch, hkv, hd, cfg.sketch_size,
-                                         cfg.lt_block_size, dtype)
-    if kind == "local_attn":
-        w = min(cfg.sliding_window, max_len)
-        return dec.init_kv_cache(batch, hkv, hd, w, dtype)
     # NB: every array leaf carries the batch on axis 0, but the scalar
     # `pos` has none — a batched cache shares one position. Serving slots
     # at different depths therefore stack batch-1 caches on a fresh
     # leading slot axis (core.decode.broadcast_slot_caches) instead of
     # batching this one.
-    return dec.init_kv_cache(batch, hkv, hd, max_len, dtype)
+    spec = st.get_spec(st.mixer_state_kind(cfg, kind))
+    return spec.init(cfg, batch, max_len, dtype)
 
 
 def attention_apply(params, cfg, x, *, kind: str, positions, mode: str,
@@ -117,7 +111,8 @@ def attention_apply(params, cfg, x, *, kind: str, positions, mode: str,
     if mode == "decode":
         q, k, v = _project(params, cfg, x, positions, kind)
         q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]   # (B, H, h)
-        if mech == "polysketch":
+        skind = st.mixer_state_kind(cfg, kind)
+        if skind == "polysketch":
             q, k = _poly_ln(params, q, k)
             rt = math.sqrt(scale)
             qm = sketch_half(params["sketch"], q * rt, cfg.poly_degree, cfg.learned_sketch)
@@ -125,11 +120,11 @@ def attention_apply(params, cfg, x, *, kind: str, positions, mode: str,
             y, cache = dec.polysketch_decode_step(
                 cache, qm, km, q, k, v, degree=cfg.poly_degree, scale=scale,
                 local_exact=cfg.local_exact)
-        elif mech == "polynomial":
+        elif skind == "poly_kv":
             q, k = _poly_ln(params, q, k)
             y, cache = dec.poly_kv_decode_step(cache, q, k, v,
                                                degree=cfg.poly_degree, scale=scale)
-        elif kind == "local_attn":
+        elif skind == "kv_ring":
             y, cache = dec.kv_ring_decode_step(cache, q, k, v)
         else:
             y, cache = dec.kv_decode_step(cache, q, k, v)

@@ -10,6 +10,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.state import DecodeState
 from repro.models import transformer as tfm
 from repro.models import whisper as whp
 
@@ -20,6 +21,7 @@ class Model(NamedTuple):
     apply: Any         # (params, batch, mode, cache, impl) -> (logits, cache, aux)
     init_cache: Any    # (params, batch_size, max_len) -> cache
     init_slot_cache: Any = None  # (params, max_len) -> batch-1 cache (serving)
+    state: DecodeState | None = None  # decode-state protocol (None: unservable)
 
 
 def build_model(cfg) -> Model:
@@ -41,8 +43,9 @@ def build_model(cfg) -> Model:
         def init_cache(params, batch_size, max_len):
             return whp.whisper_init_cache(params, cfg, batch_size, max_len)
 
-        # no init_slot_cache: ServeEngine rejects audio models (the slot
-        # machinery doesn't carry cross-attention/encoder state)
+        # no DecodeState: ServeEngine rejects models without one (the slot
+        # machinery doesn't carry cross-attention/encoder state, and the
+        # prefill needs encoder frames the token-only protocol can't feed)
         return Model(cfg, init, apply, init_cache)
 
     def init(key):
@@ -60,7 +63,8 @@ def build_model(cfg) -> Model:
     def init_slot_cache(params, max_len):
         return tfm.lm_init_slot_cache(params, cfg, max_len)
 
-    return Model(cfg, init, apply, init_cache, init_slot_cache)
+    state = DecodeState(cfg, apply, init_cache, init_slot_cache)
+    return Model(cfg, init, apply, init_cache, init_slot_cache, state)
 
 
 def input_specs(cfg, shape, *, for_train: bool | None = None) -> dict:

@@ -17,6 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.decode import RecurrentCache
+from repro.core.state import StateSpec, register_state
 from repro.distributed.sharding import shard_act
 from repro.models.layers import dense_init
 
@@ -68,44 +70,94 @@ def _rglru_coeffs(params, cfg, xc):
     return a, b
 
 
+def _combine(lhs, rhs):
+    a1, b1 = lhs
+    a2, b2 = rhs
+    return a1 * a2, a2 * b1 + b2
+
+
+def _rglru_chunked(a, b, h0, chunk: int):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t from h0, on a fixed grid.
+
+    lax.scan over fixed-width chunks (padded with the (1, 0) identity
+    element of the recurrence), parallel associative_scan within a chunk.
+    The scan body is one trace, so each chunk's arithmetic is independent
+    of the call's total length — a prefill resumed from h0 at a chunk
+    boundary is bit-identical to the longer cold prefill (the DecodeState
+    snapshot contract). Returns (h (B,S,W), h_last (B,W))."""
+    bs, s, w = a.shape
+    pad = (-s) % chunk
+    if pad:
+        a = jnp.concatenate([a, jnp.ones((bs, pad, w), a.dtype)], axis=1)
+        b = jnp.concatenate([b, jnp.zeros((bs, pad, w), b.dtype)], axis=1)
+    nc = (s + pad) // chunk
+    a_c = jnp.moveaxis(a.reshape(bs, nc, chunk, w), 1, 0)
+    b_c = jnp.moveaxis(b.reshape(bs, nc, chunk, w), 1, 0)
+
+    def step(hc, ab):
+        al, bl = ab
+        prod, zero_resp = jax.lax.associative_scan(_combine, (al, bl), axis=1)
+        h = zero_resp + prod * hc[:, None, :]
+        # pad steps are the identity, so the last column equals the state
+        # at the chunk's last real token
+        return h[:, -1, :], h
+
+    h_last, hs = jax.lax.scan(step, h0, (a_c, b_c))
+    h = jnp.moveaxis(hs, 0, 1).reshape(bs, nc * chunk, w)[:, :s]
+    return h, h_last
+
+
 def rglru_apply(params, cfg, x, *, mode="train", cache=None):
-    """x: (B,S,D) -> (y (B,S,D), new_cache)."""
+    """x: (B,S,D) -> (y (B,S,D), new_cache).
+
+    Prefill resume: `cache` (zeros for a cold start) is the state the
+    sequence continues from; the recurrence runs on a fixed
+    cfg.lt_block_size chunk grid so block-boundary resumes are
+    bit-identical to cold prefills (see _rglru_chunked)."""
     dt = x.dtype
     gate = jax.nn.gelu(shard_act(x @ params["w_gate"].astype(dt),
                                  "batch", "seq", "rnn"))
     xin = shard_act(x @ params["w_in"].astype(dt), "batch", "seq", "rnn")
 
     if mode == "decode":
-        xc, conv_state = _conv4(params, xin, cache["conv"])
+        xc, conv_state = _conv4(params, xin, cache.conv)
         a, b = _rglru_coeffs(params, cfg, xc[:, 0])
-        h = a * cache["h"] + b
+        h = a * cache.h + b
         y = h[:, None].astype(dt)
-        new_cache = {"h": h, "conv": conv_state}
-    else:
-        xc, conv_state = _conv4(params, xin)
+        new_cache = RecurrentCache(h=h, conv=conv_state)
+    elif mode == "prefill":
+        resume = cache is not None
+        xc, conv_state = _conv4(params, xin, cache.conv if resume else None)
         a, b = _rglru_coeffs(params, cfg, xc)
-
-        def combine(lhs, rhs):
-            a1, b1 = lhs
-            a2, b2 = rhs
-            return a1 * a2, a2 * b1 + b2
-
-        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h0 = (cache.h if resume else
+              jnp.zeros((x.shape[0], a.shape[-1]), jnp.float32))
+        h, h_last = _rglru_chunked(a, b, h0, cfg.lt_block_size)
+        y = h.astype(dt)
+        new_cache = RecurrentCache(h=h_last, conv=conv_state)
+    else:
+        xc, _ = _conv4(params, xin)
+        a, b = _rglru_coeffs(params, cfg, xc)
+        _, h = jax.lax.associative_scan(_combine, (a, b), axis=1)
         y = h.astype(dt)
         new_cache = None
-        if mode == "prefill":
-            new_cache = {"h": h[:, -1], "conv": conv_state}
 
     y = y * gate
     return y @ params["w_out"].astype(dt), new_cache
 
 
-def rglru_init_cache(cfg, batch, dtype=jnp.float32):
+def rglru_init_cache(cfg, batch, dtype=jnp.float32) -> RecurrentCache:
     w = cfg.rglru_width or cfg.d_model
-    return {
-        "h": jnp.zeros((batch, w), jnp.float32),
-        "conv": jnp.zeros((batch, 3, w), dtype),
-    }
+    return RecurrentCache(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, 3, w), dtype),
+    )
+
+
+register_state(StateSpec(
+    kind="rglru", node_type=RecurrentCache, granularity="token",
+    resumable=True,
+    init=lambda cfg, batch, max_len, dtype: rglru_init_cache(cfg, batch,
+                                                             dtype)))
 
 
 def rglru_sequential_ref(params, cfg, x):

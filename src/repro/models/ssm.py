@@ -20,6 +20,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.decode import RecurrentCache
+from repro.core.state import StateSpec, register_state
 from repro.distributed.sharding import shard_act
 from repro.models.layers import dense_init
 
@@ -79,33 +81,101 @@ def _conv(params, xbc, state=None):
     return out, xp[:, -(kw - 1):]
 
 
-def ssd_chunked(x, b, c, dt, a_log, *, chunk: int = 64):
+def ssd_chunked(x, b, c, dt, a_log, *, chunk: int = 64, h0=None,
+                return_state: bool = False, fixed_grid: bool = False):
     """x: (B,S,H,P); b,c: (B,S,N); dt: (B,S,H) post-softplus.
 
-    Returns y: (B,S,H,P). f32 internally.
+    Returns y: (B,S,H,P) — or (y, h_final) when return_state, where
+    h_final is the exact (B,H,N,P) recurrent state after the last token
+    (the value a resumed call passes back as h0). f32 internally.
+    Sequences are padded to a chunk multiple with dt = 0 steps (decay 1,
+    contribution 0): mathematically a no-op, and bitwise stable because
+    the pad slots sit after every real token of their chunk (causally
+    masked for outputs, identity for the state).
+
+    Two lowerings with identical math:
+
+    - Training (no h0 / state / fixed grid): the within-chunk masked
+      quadratic of ALL chunks is one batched einsum and only the small
+      cross-chunk state update is scanned — the parallel form, so a long
+      training sequence never serializes its dominant cost.
+    - Prefill/resume (h0, return_state, or fixed_grid): the whole chunk
+      computation lives inside ONE lax.scan body. Because that body is a
+      single trace, each chunk's arithmetic is identical no matter how
+      many chunks a call spans — so a prefill resumed from h_final at a
+      chunk boundary is bit-identical to the longer cold prefill (the
+      same contract block_causal_linear_attention gives the polysketch
+      state). fixed_grid additionally pins the chunk width when
+      s < chunk, keeping every call on the same absolute grid.
     """
     f32 = jnp.float32
     bs, s, h, p = x.shape
     n = b.shape[-1]
-    l = min(chunk, s)
-    assert s % l == 0, (s, l)
-    nc = s // l
+    grid_stable = fixed_grid or return_state or h0 is not None
+    l = chunk if fixed_grid else min(chunk, s)
+    pad = (-s) % l
+    if pad:
+        zpad = lambda v: jnp.concatenate(
+            [v, jnp.zeros((bs, pad) + v.shape[2:], v.dtype)], axis=1)
+        x, b, c, dt = zpad(x), zpad(b), zpad(c), zpad(dt)
+    nc = (s + pad) // l
     x = x.reshape(bs, nc, l, h, p).astype(f32)
     b = b.reshape(bs, nc, l, n).astype(f32)
     c = c.reshape(bs, nc, l, n).astype(f32)
     dt = dt.reshape(bs, nc, l, h).astype(f32)
-    a = -jnp.exp(a_log.astype(f32))[None, None, None, :] * dt   # (B,nc,l,H)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    neg_a = jnp.exp(a_log.astype(f32))                          # (H,)
+
+    if not grid_stable:
+        return _ssd_batched(x, b, c, dt, neg_a, tri, s)
+
+    def step(hstate, inp):
+        x_l, b_l, c_l, dt_l = inp                               # (B,l,...)
+        a = -neg_a[None, None, :] * dt_l                        # (B,l,H)
+        acum = jnp.cumsum(a, axis=1)                            # inclusive
+        # within-chunk (masked quadratic, cf. paper's diagonal block)
+        cb = jnp.einsum("bin,bjn->bij", c_l, b_l)               # (B,l,l)
+        diff = acum[:, :, None, :] - acum[:, None, :, :]        # (B,i,j,H)
+        # mask BEFORE exp: j>i entries have diff>0 and overflow to inf,
+        # which poisons the gradient through where (the classic
+        # jnp.where-NaN pitfall)
+        diff = jnp.where(tri[None, :, :, None], diff, -1e30)
+        w = cb[..., None] * jnp.exp(diff)                       # (B,i,j,H)
+        xdt = x_l * dt_l[..., None]
+        y = jnp.einsum("bijh,bjhp->bihp", w, xdt)
+        # cross-chunk read through the carried prefix state
+        y += jnp.einsum("bln,blh,bhnp->blhp", c_l, jnp.exp(acum), hstate)
+        # state update
+        decay_to_end = jnp.exp(acum[:, -1:, :] - acum)          # (B,l,H)
+        st = jnp.einsum("bln,blh,blhp->bhnp", b_l, decay_to_end * dt_l, x_l)
+        hstate = jnp.exp(acum[:, -1, :])[..., None, None] * hstate + st
+        return hstate, y
+
+    init = (jnp.zeros((bs, h, n, p), f32) if h0 is None
+            else jnp.asarray(h0, f32))
+    move = lambda v: jnp.moveaxis(v, 1, 0)
+    h_final, ys = jax.lax.scan(step, init, (move(x), move(b), move(c),
+                                            move(dt)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bs, nc * l, h, p)[:, :s]
+    return (y, h_final) if return_state else y
+
+
+def _ssd_batched(x, b, c, dt, neg_a, tri, s):
+    """Training lowering: within-chunk quadratic batched over all chunks
+    at once, only the cross-chunk state recurrence scanned. Inputs are
+    pre-chunked (B, nc, l, ...) f32; returns y (B, s, H, P)."""
+    f32 = jnp.float32
+    bs, nc, l, h, p = x.shape
+    a = -neg_a[None, None, None, :] * dt                        # (B,nc,l,H)
     acum = jnp.cumsum(a, axis=2)                                # inclusive
 
     # ---- within-chunk (masked quadratic, cf. paper's diagonal block) ----
     cb = jnp.einsum("bkin,bkjn->bkij", c, b)                    # (B,nc,l,l)
     diff = acum[:, :, :, None, :] - acum[:, :, None, :, :]      # (B,nc,i,j,H)
-    tri = jnp.tril(jnp.ones((l, l), bool))
     # mask BEFORE exp: j>i entries have diff>0 and overflow to inf, which
     # poisons the gradient through where (the classic jnp.where-NaN pitfall)
     diff = jnp.where(tri[None, None, :, :, None], diff, -1e30)
-    decay = jnp.exp(diff)
-    w = cb[..., None] * decay                                   # (B,nc,i,j,H)
+    w = cb[..., None] * jnp.exp(diff)                           # (B,nc,i,j,H)
     xdt = x * dt[..., None]
     y = jnp.einsum("bkijh,bkjhp->bkihp", w, xdt)
 
@@ -120,17 +190,25 @@ def ssd_chunked(x, b, c, dt, a_log, *, chunk: int = 64):
         hstate = cd[..., None, None] * hstate + st
         return hstate, out
 
-    init = jnp.zeros((bs, h, n, p), f32)
+    init = jnp.zeros((bs, h, states.shape[-2], p), f32)
     _, h0 = jax.lax.scan(step, init,
                          (states.transpose(1, 0, 2, 3, 4),
                           chunk_decay.transpose(1, 0, 2)))
     h0 = h0.transpose(1, 0, 2, 3, 4)                            # (B,nc,H,N,P)
     y += jnp.einsum("bkln,bklh,bkhnp->bklhp", c, jnp.exp(acum), h0)
-    return y.reshape(bs, s, h, p)
+    return y.reshape(bs, nc * l, h, p)[:, :s]
 
 
 def ssm_apply(params, cfg, x, *, mode="train", cache=None):
-    """x: (B,S,D). Returns (y (B,S,D), new_cache)."""
+    """x: (B,S,D). Returns (y (B,S,D), new_cache).
+
+    Prefill resume: in prefill mode, `cache` (zeros for a cold start) is
+    the state the sequence continues from — the conv window replays the
+    trailing inputs and the SSD scan starts at cache.h. The prefill scan
+    runs on a fixed cfg.lt_block_size chunk grid, so a prefill resumed at
+    a block boundary is bit-identical to the cold full-sequence prefill
+    (the DecodeState snapshot contract; see core/state.py).
+    """
     d_inner = cfg.ssm_expand * cfg.d_model
     n, p = cfg.ssm_state, cfg.ssm_head_dim
     heads = d_inner // p
@@ -138,36 +216,40 @@ def ssm_apply(params, cfg, x, *, mode="train", cache=None):
     z, xbc, dt_raw = _split(params, cfg, x)
 
     if mode == "decode":
-        xbc_conv, conv_state = _conv(params, xbc, cache["conv"])
+        xbc_conv, conv_state = _conv(params, xbc, cache.conv)
         xin = xbc_conv[..., :d_inner]
         bmat = xbc_conv[..., d_inner:d_inner + n]
         cmat = xbc_conv[..., d_inner + n:]
         dt = jax.nn.softplus(dt_raw.astype(dt_f) + params["dt_bias"])
         a = -jnp.exp(params["A_log"].astype(dt_f)) * dt[:, 0]       # (B,H)
         xh = xin[:, 0].reshape(-1, heads, p).astype(dt_f)
-        hs = jnp.exp(a)[..., None, None] * cache["h"] + \
+        hs = jnp.exp(a)[..., None, None] * cache.h + \
             dt[:, 0, :, None, None] * jnp.einsum("bn,bhp->bhnp", bmat[:, 0].astype(dt_f), xh)
         y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(dt_f), hs)
         y = y + params["D"][None, :, None] * xh
         y = y.reshape(-1, 1, d_inner)
-        new_cache = {"h": hs, "conv": conv_state}
+        new_cache = RecurrentCache(h=hs, conv=conv_state)
     else:
-        xbc_conv, conv_state = _conv(params, xbc)
+        resume = mode == "prefill" and cache is not None
+        xbc_conv, conv_state = _conv(params, xbc,
+                                     cache.conv if resume else None)
         xin = xbc_conv[..., :d_inner]
         bmat = xbc_conv[..., d_inner:d_inner + n]
         cmat = xbc_conv[..., d_inner + n:]
         dt = jax.nn.softplus(dt_raw.astype(dt_f) + params["dt_bias"])
         xh = xin.reshape(*xin.shape[:2], heads, p)
-        y = ssd_chunked(xh, bmat, cmat, dt, params["A_log"],
-                        chunk=min(64, x.shape[1]))
+        if mode == "prefill":
+            y, h_final = ssd_chunked(
+                xh, bmat, cmat, dt, params["A_log"],
+                chunk=cfg.lt_block_size, h0=cache.h if resume else None,
+                return_state=True, fixed_grid=True)
+            new_cache = RecurrentCache(h=h_final, conv=conv_state)
+        else:
+            y = ssd_chunked(xh, bmat, cmat, dt, params["A_log"],
+                            chunk=min(64, x.shape[1]))
+            new_cache = None
         y = y + params["D"][None, None, :, None] * xh.astype(dt_f)
         y = y.reshape(*x.shape[:2], d_inner)
-        new_cache = None
-        if mode == "prefill":
-            # replay final state: fold the whole sequence (cheap via scan
-            # reuse: recompute last chunk state from ssd pieces)
-            new_cache = {"h": _final_state(xh, bmat, cmat, dt, params["A_log"]),
-                         "conv": conv_state}
 
     y = y.astype(x.dtype) * jax.nn.silu(z)
     y32 = y.astype(jnp.float32)
@@ -176,28 +258,22 @@ def ssm_apply(params, cfg, x, *, mode="train", cache=None):
     return y @ params["out_proj"].astype(x.dtype), new_cache
 
 
-def _final_state(x, b, c, dt, a_log):
-    """Exact h after the full sequence (for prefill). Sequential over chunks."""
-    f32 = jnp.float32
-    bs, s, h, p = x.shape
-    n = b.shape[-1]
-    a = -jnp.exp(a_log.astype(f32))[None, None, :] * dt.astype(f32)
-    acum = jnp.cumsum(a, axis=1)
-    decay_to_end = jnp.exp(acum[:, -1:, :] - acum)
-    state = jnp.einsum("bsn,bsh,bshp->bhnp", b.astype(f32),
-                       decay_to_end * dt.astype(f32), x.astype(f32))
-    return state
-
-
-def ssm_init_cache(cfg, batch, dtype=jnp.float32):
+def ssm_init_cache(cfg, batch, dtype=jnp.float32) -> RecurrentCache:
     d_inner = cfg.ssm_expand * cfg.d_model
     n, p = cfg.ssm_state, cfg.ssm_head_dim
     heads = d_inner // p
     conv_dim = d_inner + 2 * n
-    return {
-        "h": jnp.zeros((batch, heads, n, p), jnp.float32),
-        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
-    }
+    return RecurrentCache(
+        h=jnp.zeros((batch, heads, n, p), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    )
+
+
+register_state(StateSpec(
+    kind="ssd", node_type=RecurrentCache, granularity="token",
+    resumable=True,
+    init=lambda cfg, batch, max_len, dtype: ssm_init_cache(cfg, batch,
+                                                           dtype)))
 
 
 def ssd_sequential_ref(x, b, c, dt, a_log):

@@ -18,6 +18,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import state as core_state
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -237,18 +238,18 @@ def lm_apply(params, cfg, tokens, *, mode: str = "train", cache=None,
 
 
 def lm_init_cache(params, cfg, batch: int, max_len: int):
-    """Build the decode cache pytree (stacked over groups)."""
+    """Build the decode cache pytree (stacked over groups).
+
+    Every mixer's cache node comes from its registered StateSpec
+    (core.state) — no per-family branching here."""
     pattern = effective_pattern(cfg)
     g = len(pattern)
     n_groups, rem = divmod(cfg.n_layers, g)
     dt = jnp.dtype(cfg.compute_dtype)
 
     def one_block(mk):
-        if mk in ("attn", "local_attn"):
-            return attn.init_cache(None, cfg, mk, batch, max_len, dt)
-        if mk == "rglru":
-            return rglru_mod.rglru_init_cache(cfg, batch, dt)
-        return ssm_mod.ssm_init_cache(cfg, batch, dt)
+        spec = core_state.get_spec(core_state.mixer_state_kind(cfg, mk))
+        return spec.init(cfg, batch, max_len, dt)
 
     group_cache = {f"block{bi}": one_block(mk)
                    for bi, (mk, _) in enumerate(pattern)}

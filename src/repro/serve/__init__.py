@@ -1,12 +1,13 @@
+from repro.core.state import DecodeState, bucket_chunks
 from repro.serve.engine import (GenerationResult, Request, RequestOutput,
                                 ServeEngine, generate, make_serve_fns)
-from repro.serve.prefix_cache import (PrefixCache, cache_is_snapshotable,
-                                      restore_into, snapshot_of_cache)
+from repro.serve.prefix_cache import (PrefixCache, params_fingerprint,
+                                      snapshot_nbytes)
 from repro.serve.sampling import (SamplingParams, SlotSampling, request_key,
                                   sample_step, sample_token)
 
-__all__ = ["GenerationResult", "PrefixCache", "Request", "RequestOutput",
-           "SamplingParams", "ServeEngine", "SlotSampling",
-           "cache_is_snapshotable", "generate", "make_serve_fns",
-           "request_key", "restore_into", "sample_step", "sample_token",
-           "snapshot_of_cache"]
+__all__ = ["DecodeState", "GenerationResult", "PrefixCache", "Request",
+           "RequestOutput", "SamplingParams", "ServeEngine", "SlotSampling",
+           "bucket_chunks", "generate", "make_serve_fns",
+           "params_fingerprint", "request_key", "sample_step",
+           "sample_token", "snapshot_nbytes"]

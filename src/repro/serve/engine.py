@@ -1,29 +1,38 @@
-"""Continuous-batching serve engine over the O(1) polysketch decode state.
+"""Continuous-batching serve engine over the DecodeState protocol.
 
 The paper's inference story: polysketch attention's decode state is O(1) in
 context length (r^2 x (h+1) per kv-head + one partial block), so a 32k
 context costs the same per decode step as a 1k context and slot admission
 never depends on prompt length — no paging, no eviction, no per-request
-O(n) cache.
+O(n) cache. The engine itself is family-agnostic: it speaks only the
+DecodeState protocol (core.state), so the same slot machinery serves
+polysketch, softmax/poly KV, sliding-window ring, and SSM / RG-LRU
+recurrent-state models — any model whose `Model.state` is non-None.
 
 The engine keeps a fixed number of decode *slots*. Every slot owns an
-independent cache slice (the model's decode-cache pytree at batch 1,
+independent cache slice (the model's decode-state pytree at batch 1,
 stacked over a leading slot axis so each slot carries its own ``pos``).
 Admission prefills ONE request at its native prompt length (no padding
 into attention) and scatters the resulting cache into the free slot with a
 jitted `dynamic_update_index_in_dim`; live slots are never touched. Decode
-runs all slots lockstep through one jitted, slot-vmapped model call; free
+runs all slots lockstep through one jitted, slot-vmapped tick; free
 slots decode along on stale state (their outputs are never read, and
 admission rewrites the whole slot slice — cache, token, pos) until the
 queue refills them.
 
-With a `PrefixCache` attached (serve.prefix_cache), admission first does a
-longest-prefix lookup over a content-addressed store of constant-size
-sketch-state snapshots and resumes prefill from the match point — a shared
-system prompt costs its prefill once, then a dictionary lookup.
+With a `PrefixCache` attached (legal whenever the model's
+`snapshot_granularity` is non-None — polysketch, SSM, RG-LRU), admission
+does a longest-prefix lookup over a content-addressed store of
+constant-size state snapshots and resumes prefill from the match point;
+the resumed suffix is split into power-of-two buckets
+(core.state.bucket_chunks) so the per-chunk-length jit cache stays
+bounded under diverse workloads. A shared system prompt costs its prefill
+once, then a dictionary lookup — across engine restarts too, when the
+cache has a `save_dir`.
 
 serve_prefill / serve_step (`make_serve_fns`) remain the single-shot
-functions the dry-run lowers for prefill_* / decode_* / long_* shape cells.
+functions the dry-run lowers for prefill_* / decode_* / long_* shape cells
+(batch-dict based, so encoder/VLM inputs lower too).
 """
 from __future__ import annotations
 
@@ -36,9 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.decode import broadcast_slot_caches, slot_scatter
-from repro.serve.prefix_cache import (PrefixCache, cache_is_snapshotable,
-                                      restore_into, snapshot_of_cache)
+from repro.core.state import bucket_chunks
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampling import (SamplingParams, device_scalars,
                                   init_slot_keys, init_slot_sampling,
                                   request_key, sample_step,
@@ -46,10 +54,13 @@ from repro.serve.sampling import (SamplingParams, device_scalars,
 
 
 def make_serve_fns(model, cfg):
-    """Returns (prefill_fn, decode_fn).
+    """Returns (prefill_fn, decode_fn) for shape-cell lowering.
 
     prefill_fn(params, batch)            -> (last_logits, cache)
     decode_fn(params, tokens, cache)     -> (logits, cache)   tokens (B, 1)
+
+    Batch-dict based (not DecodeState) so encoder (frames) and VLM
+    (image_embeds) prefill cells lower through the same path.
     """
 
     def prefill(params, batch):
@@ -79,28 +90,31 @@ def generate(model, cfg, params, prompt: jax.Array, steps: int, *,
              rng=None, max_len: int | None = None):
     """Sampling loop on the engine's fused sampler. prompt: (B, S0) int32.
 
-    Batch row r draws the PRNG stream `request_key(seed, r)` and advances
-    it by one split per emitted token, exactly like a ServeEngine slot —
-    so `generate(..., sampling=sp).tokens[0]` is bit-identical to a
+    Runs entirely on the DecodeState protocol, so every servable family
+    works here identically to a ServeEngine slot. Batch row r draws the
+    PRNG stream `request_key(seed, r)` and advances it by one split per
+    emitted token, exactly like a ServeEngine slot — so
+    `generate(..., sampling=sp).tokens[0]` is bit-identical to a
     single-slot engine run of the same `(seed, prompt, SamplingParams)`.
     `rng` (legacy) overrides the seed-derived base key when given.
     """
-    _, decode = make_serve_fns(model, cfg)
+    state = model.state
+    if state is None:
+        raise NotImplementedError(
+            f"{cfg.name!r} exposes no DecodeState; generate() serves "
+            "decode-state models only")
     sp = sampling or SamplingParams(temperature=temperature, top_k=top_k,
                                     top_p=top_p, seed=seed)
     bsz, s0 = prompt.shape
     max_len = max_len or (s0 + steps)
     if s0 + steps > max_len:
-        # KV-cache families index the cache at pos and
+        # KV-cache state kinds index the cache at pos and
         # `dynamic_update_index_in_dim` CLAMPS out-of-range positions —
         # overflow would silently corrupt the last cache slot, so reject
         # it up front exactly like ServeEngine.submit does.
         raise ValueError(
             f"prompt({s0}) + steps({steps}) exceeds max_len={max_len}")
-    cache = model.init_cache(params, bsz, max_len)
-    batch = {"tokens": prompt}
-    logits, cache, _ = model.apply(params, batch, mode="prefill", cache=cache)
-    last = logits[:, -1]
+    last, cache = state.prefill(params, prompt, max_len=max_len)
     base = rng if rng is not None else jax.random.PRNGKey(sp.seed)
     keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(jnp.arange(bsz))
     t, k, p, g = device_scalars(sp)
@@ -109,8 +123,9 @@ def generate(model, cfg, params, prompt: jax.Array, steps: int, *,
     def body(carry, i):
         keys, last, cache = carry
         tok, keys = sample(keys, last, t, k, p, g)
-        logits, cache = decode(params, tok[:, None], cache,
-                               positions=jnp.array([s0]) + i)
+        logits, cache = state.decode_step(params, tok[:, None],
+                                          jnp.asarray(s0, jnp.int32) + i,
+                                          cache)
         return (keys, logits, cache), tok
 
     (_, last, cache), toks = jax.lax.scan(body, (keys, last, cache),
@@ -137,12 +152,14 @@ class RequestOutput:
     ttft_s: float = 0.0          # submit -> first token (prefill argmax)
     latency_s: float = 0.0       # submit -> retirement
     decode_steps: int = 0
+    logprobs: np.ndarray | None = None  # (n_generated,) f32, engine opt-in
 
 
 @dataclass
 class _Slot:
     request: Request | None = None
     emitted: list[int] = field(default_factory=list)
+    lps: list[float] = field(default_factory=list)
     ttft_s: float = 0.0
 
     @property
@@ -154,11 +171,10 @@ class ServeEngine:
     """Continuous-batching engine over fixed decode slots.
 
     Requests are admitted into free slots one at a time: each prefill runs
-    at the request's own prompt length (polysketch prefill folds complete
-    blocks into the r^2 x (h+1) prefix state), and the resulting batch-1
-    cache is scattered into the slot axis without disturbing live slots.
-    All slots then decode lockstep through one vmapped jitted step; each
-    slot stops independently on EOS or its max-new-tokens budget.
+    at the request's own prompt length, and the resulting batch-1 state is
+    scattered into the slot axis without disturbing live slots. All slots
+    then decode lockstep through one vmapped jitted step; each slot stops
+    independently on EOS or its max-new-tokens budget.
 
     Decoding is per-request `SamplingParams` (greedy by default): the
     stacked per-slot params and PRNG keys are engine device state, so one
@@ -168,32 +184,48 @@ class ServeEngine:
     `(seed, prompt, SamplingParams)`, never on slot placement, admission
     order, or batch composition, and match `generate(..., sampling=sp)`
     token-for-token.
+
+    `logprobs=True` additionally reports the model log-probability of each
+    emitted token (from the raw pre-sampling distribution), computed inside
+    the same jitted tick — no extra host sync per token.
+
+    `min_snapshot_blocks` is the prefix-cache admission cost floor: only
+    prefixes of at least that many blocks are snapshotted or promoted
+    (1 = snapshot everything, the default).
     """
 
     def __init__(self, model, cfg, params, *, slots: int = 4,
                  max_len: int = 4096,
-                 prefix_cache: PrefixCache | None = None):
-        if cfg.family == "audio":
-            raise NotImplementedError("ServeEngine serves LM families only")
+                 prefix_cache: PrefixCache | None = None,
+                 min_snapshot_blocks: int = 1,
+                 logprobs: bool = False):
+        if model.state is None:
+            raise NotImplementedError(
+                f"{cfg.name!r} exposes no DecodeState; ServeEngine serves "
+                "decode-state models only")
         if slots < 1:
             raise ValueError("need at least one decode slot")
+        if min_snapshot_blocks < 1:
+            raise ValueError("min_snapshot_blocks must be >= 1")
         self.model, self.cfg, self.params = model, cfg, params
+        self.state = model.state
         self.slots = slots
         self.max_len = max_len
+        self.min_snapshot_blocks = min_snapshot_blocks
+        self.logprobs = logprobs
         self.queue: deque[Request] = deque()
         self.finished: list[RequestOutput] = []
         self._next_rid = 0
         self._slots = [_Slot() for _ in range(slots)]
 
-        init_slot = (model.init_slot_cache or
-                     (lambda p, m: model.init_cache(p, 1, m)))
+        state = self.state
 
         # Device state: slot-stacked cache pytree (leading slot axis over
         # batch-1 caches; per-slot `pos` scalars become a (slots,) vector),
         # the next token to feed each slot, each slot's context depth, and
         # the sampling state (per-slot PRNG key + stacked SamplingParams).
-        slot_cache0 = init_slot(params, max_len)
-        self._slot_caches = broadcast_slot_caches(slot_cache0, slots)
+        slot_cache0 = state.init_slot(params, max_len)
+        self._slot_caches = state.broadcast_slots(slot_cache0, slots)
         self._slot_tokens = jnp.zeros((slots, 1, 1), jnp.int32)
         self._slot_pos = jnp.zeros((slots,), jnp.int32)
         self._slot_keys = init_slot_keys(slots)
@@ -201,52 +233,56 @@ class ServeEngine:
 
         self.prefix_cache = prefix_cache
         if prefix_cache is not None:
-            # constant-size snapshots need every cache node to be a
-            # polysketch prefix state (z + empty buffers at block edges)
-            if not cache_is_snapshotable(slot_cache0):
+            if state.snapshot_granularity is None:
                 raise ValueError(
-                    "prefix cache requires a pure-polysketch decode cache "
-                    f"(config {cfg.name!r} carries other cache state)")
-            prefix_cache.bind_block_size(cfg.lt_block_size)
+                    "prefix cache requires a snapshot-capable decode state "
+                    f"(config {cfg.name!r}, state kinds "
+                    f"{'/'.join(state.kinds)} declare no constant-size "
+                    "snapshot)")
+            prefix_cache.bind_block_size(state.block_size)
             prefix_cache.bind_params(params)  # snapshots are weight-specific
+            prefix_cache.bind_codec(state.serialize, state.deserialize)
+        # distinct resumed-chunk lengths ever compiled (bounded by the
+        # power-of-two bucketing; asserted in tests)
+        self._resume_lens: set[int] = set()
 
         def prefill_one(params, tokens):
             # tokens: (1, S) at the request's own length — no padding enters
             # attention. Retraced per distinct prompt length. Returns the
             # last-position logits; the first token is sampled separately
             # (sample_first) so greedy/sampled requests share this trace.
-            cache = init_slot(params, self.max_len)
-            logits, cache, _ = model.apply(params, {"tokens": tokens},
-                                           mode="prefill", cache=cache)
-            return logits[:, -1], cache
+            return state.prefill(params, tokens, state.init_slot(params,
+                                                                 self.max_len))
 
         def prefill_resume(params, tokens, cache, pos0):
-            # resumed prefill: `cache` already folds the first pos0
+            # resumed prefill: `cache` already covers the first pos0
             # (block-aligned) tokens, so this chunk attends through it and
             # RoPE runs at the true absolute positions. Retraced per chunk
-            # length. NOT donated: `cache` may alias stored snapshot arrays.
-            positions = pos0 + jnp.arange(tokens.shape[1])
-            logits, cache, _ = model.apply(params, {"tokens": tokens},
-                                           mode="prefill", cache=cache,
-                                           positions=positions)
-            return logits[:, -1], cache
+            # length (bounded by bucket_chunks). NOT donated: `cache` may
+            # alias stored snapshot arrays.
+            return state.resume(params, tokens, cache, pos0)
+
+        def fresh_slot(params):
+            return state.init_slot(params, self.max_len)
 
         def restore(params, snapshot, n_tokens):
-            return restore_into(init_slot(params, self.max_len), snapshot,
-                                n_tokens)
+            return state.restore(state.init_slot(params, self.max_len),
+                                 snapshot, n_tokens)
 
         def sample_first(logits, key, temperature, top_k, top_p, greedy):
             # logits (1, V): the request's prefill last-position logits.
             # First split of the request's PRNG stream happens here.
             tok, key = sample_step(key, logits[0], temperature, top_k,
                                    top_p, greedy)
-            return tok[None], key
+            if self.logprobs:
+                lp = jax.nn.log_softmax(logits[0].astype(jnp.float32))[tok]
+            else:
+                lp = jnp.zeros((), jnp.float32)
+            return tok[None], key, lp
 
         def decode_one(params, tok, pos, cache):
-            logits, cache, _ = model.apply(params, {"tokens": tok},
-                                           mode="decode", cache=cache,
-                                           positions=pos[None])
-            return logits[0, -1], cache
+            logits, cache = state.decode_step(params, tok, pos, cache)
+            return logits[0], cache
 
         def decode_all(params, toks, pos, keys, samp, caches, active):
             # model tick for all slots, then sampling OUTSIDE the vmap so
@@ -272,18 +308,25 @@ class ServeEngine:
 
             out, new_keys = jax.lax.cond(jnp.all(samp.greedy | ~active),
                                          all_greedy, mixed, None)
+            if self.logprobs:
+                # raw-distribution logprob of the emitted token, fused into
+                # the tick (self.logprobs is trace-static)
+                lsm = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+                lps = jnp.take_along_axis(lsm, out[:, None], axis=-1)[:, 0]
+            else:
+                lps = jnp.zeros((out.shape[0],), jnp.float32)
             # free slots decode along on stale state but their feed token,
             # PRNG key, and position are all FROZEN here (one fused tick,
             # no per-field host dispatch): admission rewrites the whole
             # slot, yet a retire -> step -> admit interleaving must never
             # observe stale-decode garbage in a free slot's state, and a
-            # long drain must never push pos past max_len (KV-cache
-            # families index their cache at pos; RoPE stays bounded)
+            # long drain must never push pos past max_len (KV-cache state
+            # kinds index their cache at pos; RoPE stays bounded)
             new_toks = jnp.where(active[:, None, None], out[:, None, None],
                                  toks)
             new_keys = jnp.where(active[:, None], new_keys, keys)
             new_pos = jnp.where(active, pos + 1, pos)
-            return out, new_toks, new_pos, new_keys, caches
+            return out, lps, new_toks, new_pos, new_keys, caches
 
         # The slot-stacked cache is donated on both hot paths (decode tick,
         # admission scatter) so XLA updates it in place instead of copying
@@ -291,10 +334,11 @@ class ServeEngine:
         # the cache they pass in as consumed.
         self._prefill = jax.jit(prefill_one)
         self._prefill_resume = jax.jit(prefill_resume)
+        self._fresh_slot = jax.jit(fresh_slot)
         self._restore = jax.jit(restore)
         self._sample_first = jax.jit(sample_first)
         self._decode = jax.jit(decode_all, donate_argnums=(5,))
-        self._scatter = jax.jit(slot_scatter, donate_argnums=(0,))
+        self._scatter = jax.jit(self.state.slot_scatter, donate_argnums=(0,))
 
         # accounting
         self.total_prefill_s = 0.0
@@ -344,9 +388,12 @@ class ServeEngine:
             rid=req.rid, tokens=np.asarray(slot.emitted, np.int32),
             prompt_len=int(req.prompt.shape[0]), finish_reason=reason,
             ttft_s=slot.ttft_s, latency_s=now - req.submit_time,
-            decode_steps=len(slot.emitted) - 1)
+            decode_steps=len(slot.emitted) - 1,
+            logprobs=(np.asarray(slot.lps, np.float32) if self.logprobs
+                      else None))
         slot.request = None
         slot.emitted = []
+        slot.lps = []
         self.finished.append(out)
         return out
 
@@ -360,35 +407,64 @@ class ServeEngine:
         return None
 
     def _prefill_cached(self, req: Request):
-        """Prefill through the prefix cache: longest-prefix snapshot restore,
-        resume from the match point, snapshot admission.
+        """Prefill through the prefix cache: longest-prefix snapshot
+        restore, bucketed resumed prefill from the match point, snapshot
+        admission.
 
-        The prefill may run in two chunks when a shared-but-unsnapshotted
-        boundary was detected (PrefixCache promote policy) — the split point
-        is block-aligned, so the intermediate state is itself a valid
-        snapshot. Resumed chunks are bit-identical to the cold path."""
+        Mandatory cut points are the promote boundary (a shared-but-
+        unsnapshotted prefix detected by the PrefixCache) and — for
+        token-granularity states, whose snapshot covers exactly the tokens
+        prefilled so far — the block-aligned truncation the admission
+        snapshot wants. Block-granularity states (polysketch) snapshot the
+        truncation for free from the final state (the tail lives in the
+        buffers). Each segment between cuts is further split into
+        power-of-two block buckets so `_prefill_resume` compiles a bounded
+        set of chunk lengths. All cut points are block-aligned, so every
+        intermediate state is itself a valid snapshot and the whole
+        resumed prefill is bit-identical to a cold one."""
         pc = self.prefix_cache
-        plan = pc.plan(np.asarray(req.prompt))
-        cache, pos = None, 0
+        plen = int(req.prompt.shape[0])
+        blk = pc.block_size
+        plan = pc.plan(np.asarray(req.prompt),
+                       min_blocks=self.min_snapshot_blocks)
+
+        snap_at = {}                       # cut position -> chain key
+        if plan.n_promote:
+            snap_at[plan.n_promote] = plan.promote_key
+        want_trunc = (bool(plan.trunc_key) and plan.n_trunc > plan.n_restore
+                      and plan.n_trunc != plan.n_promote)
+        split_trunc = (want_trunc and plan.n_trunc < plen
+                       and self.state.snapshot_granularity == "token")
+        if split_trunc:
+            snap_at[plan.n_trunc] = plan.trunc_key
+
         if plan.n_restore:
             cache = self._restore(self.params, plan.snapshot,
                                   jnp.asarray(plan.n_restore, jnp.int32))
-            pos = plan.n_restore
-        logits = None
-        for cut in plan.chunks:
+        else:
+            cache = self._fresh_slot(self.params)
+
+        cuts, pos = [], plan.n_restore
+        for cut in sorted(set(snap_at) | {plen}):
+            if cut > pos:
+                cuts.extend(bucket_chunks(pos, cut, blk))
+                pos = cut
+        logits, pos = None, plan.n_restore
+        for cut in cuts:
             chunk = req.prompt[pos:cut][None]
-            if cache is None:
-                logits, cache = self._prefill(self.params, chunk)
-            else:
-                logits, cache = self._prefill_resume(
-                    self.params, chunk, cache, jnp.asarray(pos, jnp.int32))
-            if cut == plan.n_promote:
-                pc.insert(plan.promote_key, cut, snapshot_of_cache(cache))
+            self._resume_lens.add(cut - pos)
+            logits, cache = self._prefill_resume(
+                self.params, chunk, cache, jnp.asarray(pos, jnp.int32))
+            key = snap_at.get(cut)
+            if key:
+                pc.insert(key, cut, self.state.snapshot(cache))
             pos = cut
-        if plan.n_trunc and plan.n_trunc != plan.n_promote:
-            # the final cache's z covers exactly the block-aligned
-            # truncation of the prompt (the tail sits in the buffers)
-            pc.insert(plan.trunc_key, plan.n_trunc, snapshot_of_cache(cache))
+        if want_trunc and not split_trunc:
+            # block granularity (the final state's prefix matrix covers
+            # exactly the truncation; the tail sits in the buffers), or a
+            # block-aligned prompt whose final state IS the truncation
+            pc.insert(plan.trunc_key, plan.n_trunc,
+                      self.state.snapshot(cache))
         return logits, cache
 
     def _admit(self) -> list[RequestOutput]:
@@ -409,8 +485,9 @@ class ServeEngine:
             # first token: sampled from the prefill logits with the
             # request's own PRNG stream (request_key(seed) — independent of
             # the slot index, so placement never changes the tokens)
-            tok, key = self._sample_first(logits, request_key(req.sampling.seed),
-                                          *device_scalars(req.sampling))
+            tok, key, lp = self._sample_first(
+                logits, request_key(req.sampling.seed),
+                *device_scalars(req.sampling))
             tok = jax.block_until_ready(tok)
             self.total_prefill_s += time.perf_counter() - t0
             self.prefills += 1
@@ -428,6 +505,8 @@ class ServeEngine:
 
             slot.request = req
             slot.emitted = [int(tok[0])]
+            if self.logprobs:
+                slot.lps = [float(lp)]
             slot.ttft_s = time.perf_counter() - req.submit_time
             fin = self._check_finished(si)
             if fin is not None:
@@ -442,17 +521,20 @@ class ServeEngine:
             return done
         active = np.array([not s.free for s in self._slots])
         t0 = time.perf_counter()
-        (toks, self._slot_tokens, self._slot_pos, self._slot_keys,
+        (toks, lps, self._slot_tokens, self._slot_pos, self._slot_keys,
          self._slot_caches) = self._decode(
             self.params, self._slot_tokens, self._slot_pos, self._slot_keys,
             self._slot_samp, self._slot_caches, jnp.asarray(active))
         host_toks = np.asarray(toks)          # (slots,) — syncs the step
+        host_lps = np.asarray(lps) if self.logprobs else None
         self.total_decode_s += time.perf_counter() - t0
         self.decode_steps += 1
         for si, slot in enumerate(self._slots):
             if slot.free:
                 continue
             slot.emitted.append(int(host_toks[si]))
+            if self.logprobs:
+                slot.lps.append(float(host_lps[si]))
             fin = self._check_finished(si)
             if fin is not None:
                 done.append(fin)

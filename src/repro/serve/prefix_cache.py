@@ -1,14 +1,18 @@
-"""Prefix-reuse sketch-state cache: content-addressed constant-size snapshots.
+"""Prefix-reuse snapshot cache: content-addressed constant-size decode state.
 
 Softmax serving stacks pay O(n) memory per cached prefix (paged KV), so
-prefix caching is a capacity-management problem. PolySketchFormer's decode
-state is O(1) in context length — an r^2 x (h+1) prefix matrix per kv-head
-plus one partial block buffer — and at any *block-aligned* position the
-buffer is empty, so a snapshot of the state after a block-aligned prefix is
-just the per-layer folded `z` (+ the position): constant-size no matter how
-long the prefix is. Thousands of requests sharing a system prompt / few-shot
-preamble can therefore resume prefill from the match point for the cost of a
-dictionary lookup and a suffix-length prefill.
+prefix caching is a capacity-management problem. Constant-size decode
+states — PolySketchFormer's r^2 x (h+1) sketch state, but equally the
+SSM / RG-LRU recurrent states — make a cached prefix a few KB no matter
+how long it is: thousands of requests sharing a system prompt / few-shot
+preamble resume prefill from the match point for the cost of a dictionary
+lookup and a suffix-length prefill.
+
+This module is written against the DecodeState protocol (core.state): any
+model whose composite ``snapshot_granularity`` is non-None can attach a
+PrefixCache — the store itself never inspects model family or cache
+structure (snapshots are opaque pytrees; serialization goes through the
+codec the engine binds from its DecodeState).
 
 Content addressing: a SHA-256 rolling-hash chain over block_size-token
 prompt blocks. key_d = H(key_{d-1} || tokens[(d-1)b : db]) names the exact
@@ -16,7 +20,8 @@ d-block prefix *content*, so lookup is a walk down the request's own chain —
 the deepest key present is the longest reusable prefix. Chains for prompts
 that share a prefix share keys exactly up to the divergence block.
 
-Snapshot admission is two-tier:
+Snapshot admission is two-tier (both tiers subject to the engine's
+``min_snapshot_blocks`` cost floor):
   - after every prefill, the state at the prompt's block-aligned truncation
     is inserted (multi-turn reuse: a follow-up prompt extending this one
     hits it directly);
@@ -27,61 +32,32 @@ Snapshot admission is two-tier:
     so shared system prompts with divergent suffixes are detected
     automatically and hit from the third occurrence on.
 
-Eviction is LRU under a byte budget; lookups refresh recency.
+Eviction is hit-count-weighted under a byte budget: the victim is the
+least-hit entry, ties broken LRU — a hot system prompt survives a burst of
+one-off prompts that would evict it under pure LRU. Lookups refresh both
+recency and the hit count.
 
-Bit-exactness: core.decode.polysketch_prefill accumulates z block-by-block
-(the scan carry) and resumes from cache.z, so logits and final cache from a
-snapshot-resumed prefill equal a cold full-prompt prefill bit-for-bit.
+Persistence: with ``save_dir`` set, every admitted snapshot is also written
+to disk (``save_dir/<params_fp>/<chain_key>.npz`` via the bound codec) and
+missing chain keys are lazily probed on lookup — a restarted engine warms
+itself from the store on first contact with each prefix, and engines on
+different hosts can share one directory. Disk entries are never evicted by
+the in-memory budget.
+
+Bit-exactness: resumable prefills accumulate state on a fixed block grid
+(polysketch: the scan carry over lt_block_size blocks; SSM/RG-LRU: the
+fixed-grid chunk scan), so logits and final state from a snapshot-resumed
+prefill equal a cold full-prompt prefill bit-for-bit.
 """
 from __future__ import annotations
 
 import hashlib
+import os
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-
-from repro.core.decode import PolysketchCache
-
-
-# ---------------------------------------------------------------------------
-# snapshot extraction / restoration over the model's decode-cache pytree
-# ---------------------------------------------------------------------------
-
-def _is_psk(node) -> bool:
-    return isinstance(node, PolysketchCache)
-
-
-def cache_is_snapshotable(cache) -> bool:
-    """True iff every stateful node of the decode cache is a PolysketchCache.
-
-    Only then is a block-aligned snapshot constant-size (z + pos with empty
-    buffers); KV / ring / recurrent caches would make it O(n) or lossy.
-    """
-    nodes = jax.tree_util.tree_leaves(
-        cache, is_leaf=lambda x: isinstance(x, tuple) and hasattr(x, "_fields"))
-    return bool(nodes) and all(_is_psk(n) for n in nodes)
-
-
-def snapshot_of_cache(cache):
-    """Constant-size snapshot: the per-layer folded prefix states `z` only.
-
-    Valid at block-aligned positions, where buffers are empty by
-    construction. The pytree keeps the cache's layer structure with each
-    PolysketchCache node replaced by its z array.
-    """
-    return jax.tree_util.tree_map(lambda c: c.z, cache, is_leaf=_is_psk)
-
-
-def restore_into(fresh_cache, snapshot, n_tokens):
-    """Rebuild a decode cache from a snapshot: z restored, buffers empty,
-    pos = n_tokens (block-aligned). `fresh_cache` supplies zeros/structure."""
-    def _restore(c, z):
-        pos = jnp.broadcast_to(jnp.asarray(n_tokens, c.pos.dtype), c.pos.shape)
-        return c._replace(z=z.astype(c.z.dtype), pos=pos)
-    return jax.tree_util.tree_map(_restore, fresh_cache, snapshot,
-                                  is_leaf=_is_psk)
 
 
 def snapshot_nbytes(snapshot) -> int:
@@ -121,6 +97,7 @@ class _Entry:
     snapshot: object
     n_tokens: int
     nbytes: int
+    hits: int = 0
 
 
 @dataclass
@@ -128,11 +105,15 @@ class PrefillPlan:
     """What the engine should do for one prompt (all host-side ints).
 
     n_restore: tokens covered by the best snapshot (0 = cold start).
-    snapshot:  the z-pytree to restore, or None.
+    snapshot:  the pytree to restore, or None.
     n_promote: seen-but-unsnapshotted shared boundary to split the prefill
-               at and snapshot (None = single-chunk prefill).
+               at and snapshot (None = no promote split).
     n_trunc:   the prompt's block-aligned truncation, snapshotted after the
-               prefill completes (0 = prompt shorter than one block).
+               prefill completes (0 = below the admission floor).
+
+    The engine derives the actual prefill cut list itself: the promote
+    boundary, plus the truncation for token-granularity states, each
+    segment bucketed by core.state.bucket_chunks to bound retracing.
     """
     n_restore: int = 0
     snapshot: object = None
@@ -140,30 +121,42 @@ class PrefillPlan:
     promote_key: bytes = b""
     n_trunc: int = 0
     trunc_key: bytes = b""
-    chunks: list[int] = field(default_factory=list)  # prefill cut points
 
 
 class PrefixCache:
-    """LRU, byte-budgeted store of constant-size prefix-state snapshots.
+    """Byte-budgeted store of constant-size prefix-state snapshots.
 
-    block_size is bound by the engine to the model's attention block
+    block_size is bound by the engine to the model's state grid
     (cfg.lt_block_size) — snapshots are only valid at its multiples.
+    `save_dir` adds a disk tier (see module docstring); it needs the
+    engine-bound codec and params fingerprint before any IO happens.
     """
 
     def __init__(self, max_bytes: int, block_size: int | None = None, *,
-                 max_seen_keys: int = 1 << 16):
+                 max_seen_keys: int = 1 << 16, save_dir: str | None = None):
         if max_bytes < 1:
             raise ValueError("max_bytes must be positive")
         self.max_bytes = int(max_bytes)
         self.block_size = block_size
         self.max_seen_keys = max_seen_keys
+        self.save_dir = save_dir
         self._params_fp: bytes | None = None
+        self._serialize = None
+        self._deserialize = None
         self._entries: OrderedDict[bytes, _Entry] = OrderedDict()
         self._seen: OrderedDict[bytes, None] = OrderedDict()
+        # eviction index: hit count -> recency-ordered keys, so victim
+        # selection (fewest hits, LRU tiebreak) is O(1)-ish per eviction
+        # instead of a full entry scan on the admission path
+        self._hit_buckets: dict[int, OrderedDict[bytes, None]] = {}
+        # disk keys that failed to load (corrupt file) or to admit
+        # (over-budget snapshot): never re-read them on later lookups
+        self._disk_skip: OrderedDict[bytes, None] = OrderedDict()
         self.bytes = 0
         self.lookups = self.hits = self.misses = 0
         self.hit_tokens = 0
         self.inserts = self.evictions = 0
+        self.disk_loads = self.disk_writes = 0
 
     def bind_block_size(self, block_size: int):
         if self.block_size is None:
@@ -184,6 +177,12 @@ class PrefixCache:
                 "prefix cache already holds snapshots for different model "
                 "weights; use one PrefixCache per parameter set")
 
+    def bind_codec(self, serialize, deserialize):
+        """Snapshot (de)serializers from the engine's DecodeState — the
+        store never interprets snapshot structure itself."""
+        self._serialize = serialize
+        self._deserialize = deserialize
+
     # -- content addressing ------------------------------------------------
 
     def _chain(self, tokens, n_blocks: int) -> list[bytes]:
@@ -199,14 +198,89 @@ class PrefixCache:
             keys.append(key)
         return keys
 
+    # -- disk tier ---------------------------------------------------------
+
+    @property
+    def _disk_ready(self) -> bool:
+        return (self.save_dir is not None and self._params_fp is not None
+                and self._deserialize is not None)
+
+    def _disk_path(self, key: bytes) -> str:
+        return os.path.join(self.save_dir, self._params_fp.hex()[:16],
+                            key.hex() + ".npz")
+
+    def _disk_probe(self, key: bytes) -> bool:
+        """Lazily pull a persisted snapshot into the memory tier.
+
+        Returns True iff the key is now a usable in-memory entry. Every
+        non-loadable outcome — missing file, unreadable file (a crashed
+        concurrent writer, bit rot), snapshot that cannot fit the byte
+        budget — is remembered in a bounded skip-set so no lookup pays
+        that probe's syscalls/I-O twice. Negative caching means entries
+        persisted by ANOTHER engine after this one probed the key are
+        not picked up until the skip-set churns; a local insert of the
+        key clears its negative entry (see insert())."""
+        if key in self._disk_skip:
+            return False
+        path = self._disk_path(key)
+        if not os.path.exists(path):
+            self._mark_disk_skip(key)
+            return False
+        try:
+            with open(path, "rb") as f:
+                snapshot, n_tokens = self._deserialize(f.read())
+        except Exception:
+            self._mark_disk_skip(key)
+            return False
+        if self._admit(key, n_tokens, snapshot):
+            self.disk_loads += 1
+            return True
+        self._mark_disk_skip(key)
+        return False
+
+    def _mark_disk_skip(self, key: bytes):
+        self._disk_skip[key] = None
+        self._disk_skip.move_to_end(key)
+        while len(self._disk_skip) > self.max_seen_keys:
+            self._disk_skip.popitem(last=False)
+
+    def _disk_write(self, key: bytes, n_tokens: int, snapshot):
+        """Best-effort persistence: a full/read-only filesystem must never
+        abort the serving loop, so all I/O errors are swallowed (the
+        memory tier already holds the entry)."""
+        if not self._disk_ready or self._serialize is None:
+            return
+        path = self._disk_path(key)
+        # pid-unique tmp name: engines sharing one save_dir must not
+        # interleave bytes into a common tmp file; os.replace publishes
+        # whole files atomically
+        tmp = f"{path}.{os.getpid()}.tmp"
+        try:
+            if os.path.exists(path):
+                return
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            try:
+                with open(tmp, "wb") as f:
+                    f.write(self._serialize(snapshot, n_tokens))
+                os.replace(tmp, path)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+        except OSError:
+            return
+        self.disk_writes += 1
+
     # -- lookup / planning -------------------------------------------------
 
-    def plan(self, tokens) -> PrefillPlan:
+    def plan(self, tokens, min_blocks: int = 1) -> PrefillPlan:
         """Longest-prefix lookup + admission plan for one prompt.
 
         The match is capped at the deepest block boundary strictly inside
         the prompt (>= 1 token must remain to prefill for the first-token
-        logits). Marks the prompt's chain keys as seen.
+        logits). Boundaries shallower than `min_blocks` blocks are below
+        the admission cost floor: never promoted or truncation-snapshotted
+        (restoring an existing shallow snapshot is still allowed). Marks
+        the prompt's chain keys as seen.
         """
         assert self.block_size, "bind_block_size() first"
         blk = self.block_size
@@ -227,25 +301,38 @@ class PrefixCache:
                 hit_d = seen_d = d
             elif key in self._seen:
                 seen_d = d
+        if self._disk_ready:
+            # disk tier, deepest-first: at most ONE snapshot is loaded per
+            # lookup (the best one), shallower persisted entries are never
+            # read, and a shallow probe can never evict a deeper hot
+            # in-memory entry the request would actually use
+            for d in range(max_d, hit_d, -1):
+                if self._disk_probe(keys[d - 1]):
+                    hit_d = d
+                    seen_d = max(seen_d, d)
+                    break
 
-        plan = PrefillPlan(n_trunc=trunc_d * blk,
-                           trunc_key=keys[trunc_d - 1] if trunc_d else b"")
+        admit_d = trunc_d if trunc_d >= min_blocks else 0
+        plan = PrefillPlan(n_trunc=admit_d * blk,
+                           trunc_key=keys[admit_d - 1] if admit_d else b"")
         if hit_d:
-            entry = self._entries[keys[hit_d - 1]]
-            self._entries.move_to_end(keys[hit_d - 1])
+            key = keys[hit_d - 1]
+            entry = self._entries[key]
+            self._bucket_remove(key, entry.hits)
+            entry.hits += 1
+            self._bucket_add(key, entry.hits)
+            self._entries.move_to_end(key)
             plan.n_restore = entry.n_tokens
             plan.snapshot = entry.snapshot
             self.hits += 1
             self.hit_tokens += entry.n_tokens
         else:
             self.misses += 1
-        if seen_d > hit_d:
+        if seen_d > hit_d and seen_d >= min_blocks:
             # a previous prompt shared this boundary but no snapshot exists
             # there yet: split the prefill and allocate on reuse
             plan.n_promote = seen_d * blk
             plan.promote_key = keys[seen_d - 1]
-        plan.chunks = [c for c in (plan.n_promote, plen)
-                       if c is not None and c > plan.n_restore]
 
         for d in range(trunc_d):
             self._mark_seen(keys[d])
@@ -259,23 +346,55 @@ class PrefixCache:
 
     # -- admission / eviction ----------------------------------------------
 
-    def insert(self, key: bytes, n_tokens: int, snapshot):
-        """Admit one snapshot under the byte budget (LRU eviction)."""
-        if not key:
-            return
+    def _bucket_add(self, key: bytes, hits: int):
+        self._hit_buckets.setdefault(hits, OrderedDict())[key] = None
+
+    def _bucket_remove(self, key: bytes, hits: int):
+        bucket = self._hit_buckets[hits]
+        del bucket[key]
+        if not bucket:
+            del self._hit_buckets[hits]
+
+    def _evict_one(self):
+        """Victim = fewest hits, ties broken LRU. The hit-bucket index
+        makes this O(distinct hit counts), not O(entries)."""
+        low = min(self._hit_buckets)
+        victim, _ = self._hit_buckets[low].popitem(last=False)
+        if not self._hit_buckets[low]:
+            del self._hit_buckets[low]
+        old = self._entries.pop(victim)
+        self.bytes -= old.nbytes
+        self.evictions += 1
+
+    def _admit(self, key: bytes, n_tokens: int, snapshot) -> bool:
         if key in self._entries:
             self._entries.move_to_end(key)
-            return
+            self._bucket_add(key, self._bucket_pop(key))  # refresh recency
+            return False
         nbytes = snapshot_nbytes(snapshot)
         if nbytes > self.max_bytes:
-            return  # one snapshot larger than the whole budget
+            return False  # one snapshot larger than the whole budget
         while self.bytes + nbytes > self.max_bytes and self._entries:
-            _, old = self._entries.popitem(last=False)
-            self.bytes -= old.nbytes
-            self.evictions += 1
+            self._evict_one()
         self._entries[key] = _Entry(snapshot, int(n_tokens), nbytes)
+        self._bucket_add(key, 0)
         self.bytes += nbytes
         self.inserts += 1
+        return True
+
+    def _bucket_pop(self, key: bytes) -> int:
+        hits = self._entries[key].hits
+        self._bucket_remove(key, hits)
+        return hits
+
+    def insert(self, key: bytes, n_tokens: int, snapshot):
+        """Admit one snapshot under the byte budget; persist it when a
+        disk tier is configured."""
+        if not key:
+            return
+        if self._admit(key, n_tokens, snapshot):
+            self._disk_skip.pop(key, None)  # a local write beats a stale
+            self._disk_write(key, n_tokens, snapshot)  # negative probe
 
     # -- accounting --------------------------------------------------------
 
@@ -285,6 +404,7 @@ class PrefixCache:
     def reset_stats(self):
         self.lookups = self.hits = self.misses = 0
         self.hit_tokens = self.inserts = self.evictions = 0
+        self.disk_loads = self.disk_writes = 0
 
     def stats(self) -> dict:
         return {
@@ -298,4 +418,6 @@ class PrefixCache:
             "bytes": self.bytes,
             "max_bytes": self.max_bytes,
             "seen_keys": len(self._seen),
+            "disk_loads": self.disk_loads,
+            "disk_writes": self.disk_writes,
         }

@@ -14,9 +14,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.state import restore_state, snapshot_state
 from repro.models import build_model
-from repro.serve import (PrefixCache, ServeEngine, cache_is_snapshotable,
-                         generate, restore_into, snapshot_of_cache)
+from repro.serve import PrefixCache, ServeEngine, generate
 from repro.serve.prefix_cache import snapshot_nbytes
 
 BLK = 16  # smoke config lt_block_size
@@ -58,11 +58,11 @@ def test_snapshot_resume_bit_parity(n_kv_heads, suffix):
     cache = model.init_slot_cache(params, max_len)
     _, cache_pfx, _ = model.apply(
         params, {"tokens": prompt[None, :n0]}, mode="prefill", cache=cache)
-    snap = snapshot_of_cache(cache_pfx)
+    snap = snapshot_state(cache_pfx)
 
     # restore into a FRESH cache and resume from the match point
-    restored = restore_into(model.init_slot_cache(params, max_len), snap,
-                            jnp.asarray(n0, jnp.int32))
+    restored = restore_state(model.init_slot_cache(params, max_len), snap,
+                             jnp.asarray(n0, jnp.int32))
     logits_res, cache_res, _ = model.apply(
         params, {"tokens": prompt[None, n0:]}, mode="prefill", cache=restored,
         positions=n0 + jnp.arange(suffix))
@@ -130,27 +130,25 @@ def test_plan_promotes_shared_boundary_then_hits():
     p1 = mk(6)                                       # 14 tokens, trunc = 12
     plan1 = pc.plan(p1)
     assert plan1.n_restore == 0 and plan1.n_promote is None
-    assert plan1.n_trunc == 12 and plan1.chunks == [14]
+    assert plan1.n_trunc == 12
     pc.insert(plan1.trunc_key, plan1.n_trunc, _fake_snap(8))
 
     p2 = mk(6)                                       # shares only the prefix
     plan2 = pc.plan(p2)
     assert plan2.n_restore == 0                      # p1's snapshot diverged
     assert plan2.n_promote == 2 * blk                # shared seen boundary
-    assert plan2.chunks == [8, 14]
     pc.insert(plan2.promote_key, plan2.n_promote, _fake_snap(8))
     pc.insert(plan2.trunc_key, plan2.n_trunc, _fake_snap(8))
 
     plan3 = pc.plan(mk(6))
     assert plan3.n_restore == 2 * blk and plan3.snapshot is not None
-    assert plan3.n_promote is None and plan3.chunks == [14]
+    assert plan3.n_promote is None
     assert pc.hits == 1 and pc.misses == 2
 
     # identical full prompt repeated: its own truncation snapshot (depth 3,
     # within the usable plen-1 cap) is the deepest hit — suffix-only prefill
     plan4 = pc.plan(p1)
     assert plan4.n_restore == 12 and plan4.n_promote is None
-    assert plan4.chunks == [14]
 
 
 def test_match_never_consumes_whole_prompt():
@@ -163,7 +161,6 @@ def test_match_never_consumes_whole_prompt():
     pc.insert(plan.trunc_key, plan.n_trunc, _fake_snap(8))  # covers all 8
     plan2 = pc.plan(toks)
     assert plan2.n_restore <= 7
-    assert plan2.chunks and plan2.chunks[-1] == 8
 
 
 # ---------------------------------------------------------------------------
@@ -199,7 +196,7 @@ def test_engine_eviction_under_byte_pressure_stays_correct():
     """A budget holding ~one snapshot forces evictions on disjoint prompts;
     accounting stays within budget and outputs stay exact."""
     model, cfg, params = _setup(seed=4)
-    one_snap = snapshot_nbytes(snapshot_of_cache(
+    one_snap = snapshot_nbytes(snapshot_state(
         model.init_slot_cache(params, 64)))
     pc = PrefixCache(max_bytes=one_snap + one_snap // 2)
     eng = ServeEngine(model, cfg, params, slots=1, max_len=64,
@@ -216,9 +213,9 @@ def test_engine_eviction_under_byte_pressure_stays_correct():
         np.testing.assert_array_equal(outs[rid].tokens, want)
 
 
-def test_engine_rejects_prefix_cache_for_non_polysketch_cache():
+def test_engine_rejects_prefix_cache_for_non_snapshotable_state():
     model, cfg, params = _setup(seed=0, attention="softmax")
-    assert not cache_is_snapshotable(model.init_slot_cache(params, 32))
+    assert model.state.snapshot_granularity is None
     with pytest.raises(ValueError):
         ServeEngine(model, cfg, params, slots=1, max_len=32,
                     prefix_cache=PrefixCache(max_bytes=1 << 20))
@@ -245,6 +242,200 @@ def test_prefix_cache_rejects_foreign_params():
     with pytest.raises(ValueError):
         ServeEngine(model, cfg, params_b, slots=1, max_len=32,
                     prefix_cache=pc)
+
+
+def test_ssm_engine_prefix_hits_bit_identical_to_cold():
+    """Acceptance: an SSM-family model runs through ServeEngine with
+    prefix-cache hits and every output is bit-identical to cold prefill
+    (generate()). The recurrent state's fixed-grid prefill scan makes
+    snapshot-resumed prefills exact, not approximate."""
+    cfg = get_config("mamba2-780m", smoke=True).replace(lt_block_size=BLK)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(5))
+    assert model.state.snapshot_granularity == "token"
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, cfg.vocab_size, 3 * BLK)
+    prompts = [jnp.asarray(np.concatenate(
+                   [shared, rng.integers(0, cfg.vocab_size, BLK - 3)]),
+                   jnp.int32)
+               for _ in range(4)]
+    pc = PrefixCache(max_bytes=1 << 22)
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=128,
+                      prefix_cache=pc)
+    for p in prompts:
+        eng.submit(p, 5)
+    outs = {o.rid: o for o in eng.run()}
+    st = eng.stats()["prefix_cache"]
+    assert st["hits"] >= 2 and st["hit_tokens"] >= 2 * 3 * BLK
+    for rid, p in enumerate(prompts):
+        want = np.asarray(generate(model, cfg, params, p[None], 5).tokens[0])
+        np.testing.assert_array_equal(outs[rid].tokens, want)
+
+
+def test_prefix_cache_persists_across_restart(tmp_path):
+    """save_dir: snapshots admitted by one engine are lazily loaded by a
+    fresh PrefixCache + engine (simulated restart), count as disk loads,
+    and resume bit-identically."""
+    model, cfg, params = _setup(seed=6)
+    prompt = _tokens(cfg, 3 * BLK + 5, seed=60)
+    ref = np.asarray(generate(model, cfg, params, prompt[None], 6).tokens[0])
+
+    pc1 = PrefixCache(max_bytes=1 << 22, save_dir=str(tmp_path))
+    eng1 = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                       prefix_cache=pc1)
+    eng1.submit(prompt, 6)
+    np.testing.assert_array_equal(eng1.run()[0].tokens, ref)
+    assert pc1.stats()["disk_writes"] >= 1
+
+    pc2 = PrefixCache(max_bytes=1 << 22, save_dir=str(tmp_path))
+    eng2 = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                       prefix_cache=pc2)
+    eng2.submit(prompt, 6)
+    np.testing.assert_array_equal(eng2.run()[0].tokens, ref)
+    st = pc2.stats()
+    assert st["disk_loads"] >= 1 and st["hits"] >= 1
+    # already-persisted keys are not rewritten
+    assert st["disk_writes"] == 0
+
+
+def test_disk_tier_tolerates_corrupt_and_oversized_files(tmp_path):
+    """A corrupt persisted snapshot (crashed concurrent writer) must not
+    crash lookups, and an over-budget on-disk snapshot is read at most
+    once — both land in the skip-set instead of being retried forever."""
+    import os
+    model, cfg, params = _setup(seed=11)
+    prompt = _tokens(cfg, 3 * BLK + 5, seed=110)
+    pc1 = PrefixCache(max_bytes=1 << 22, save_dir=str(tmp_path))
+    eng1 = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                       prefix_cache=pc1)
+    eng1.submit(prompt, 3)
+    ref = eng1.run()[0]
+    # corrupt every persisted file
+    for root, _, files in os.walk(tmp_path):
+        for f in files:
+            with open(os.path.join(root, f), "wb") as fh:
+                fh.write(b"not an npz")
+    pc2 = PrefixCache(max_bytes=1 << 22, save_dir=str(tmp_path))
+    eng2 = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                       prefix_cache=pc2)
+    eng2.submit(prompt, 3)
+    out = eng2.run()[0]                   # must not raise
+    np.testing.assert_array_equal(out.tokens, ref.tokens)
+    assert pc2.stats()["disk_loads"] == 0
+    # the corrupt file was skipped once and never re-read
+    n_skip = len(pc2._disk_skip)
+    assert n_skip >= 1
+    eng2.submit(prompt, 3)
+    eng2.run()
+    assert len(pc2._disk_skip) == n_skip
+
+    # over-budget on-disk snapshot: probed once, then skipped
+    tiny_dir = tmp_path / "tiny"
+    pc3 = PrefixCache(max_bytes=1 << 22, save_dir=str(tiny_dir))
+    eng3 = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                       prefix_cache=pc3)
+    eng3.submit(prompt, 3)
+    eng3.run()
+    pc4 = PrefixCache(max_bytes=64, save_dir=str(tiny_dir))  # budget < snap
+    eng4 = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                       prefix_cache=pc4)
+    eng4.submit(prompt, 3)
+    eng4.run()
+    assert pc4.stats()["disk_loads"] == 0 and len(pc4) == 0
+    skips = len(pc4._disk_skip)
+    assert skips >= 1
+    eng4.submit(prompt, 3)
+    eng4.run()
+    assert len(pc4._disk_skip) == skips   # no repeated file reads
+
+
+def test_min_snapshot_blocks_admission_floor():
+    """Cost-aware admission: prefixes shallower than the floor are neither
+    truncation-snapshotted nor promoted; deep prefixes still are."""
+    model, cfg, params = _setup(seed=7)
+    pc = PrefixCache(max_bytes=1 << 22)
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                      prefix_cache=pc, min_snapshot_blocks=2)
+    shallow = _tokens(cfg, BLK + 4, seed=70)      # 1 block: below the floor
+    for _ in range(3):
+        eng.submit(shallow, 3)
+    eng.run()
+    assert len(pc) == 0 and pc.inserts == 0
+
+    deep = _tokens(cfg, 2 * BLK + 4, seed=71)     # 2 blocks: at the floor
+    eng.submit(deep, 3)
+    eng.run()
+    assert len(pc) == 1
+    eng.submit(deep, 3)
+    eng.run()
+    assert pc.hits >= 1
+
+
+def test_hit_weighted_eviction_keeps_hot_entries():
+    """Eviction victims are least-hit first (LRU only breaks ties): a hot
+    system prompt survives a burst of one-off prompts."""
+    snap = _fake_snap(256)
+    per = snapshot_nbytes(snap)
+    pc = PrefixCache(max_bytes=2 * per, block_size=4)
+    hot = np.arange(8)                    # 2 blocks
+    plan = pc.plan(hot)
+    pc.insert(plan.trunc_key, 8, snap)
+    pc.plan(np.concatenate([hot, [9, 9, 9]]))       # hit -> hits=1
+    assert pc.hits == 1
+    # two one-off inserts under a 2-entry budget: the unhit entry churns,
+    # the hot one survives both evictions
+    pc.insert(b"cold1", 4, snap)
+    pc.insert(b"cold2", 4, snap)
+    assert pc.evictions == 1
+    assert plan.trunc_key in pc._entries and b"cold2" in pc._entries
+    plan2 = pc.plan(np.concatenate([hot, [7, 7, 7]]))
+    assert plan2.n_restore == 8           # still hits after the churn
+
+
+def test_bucket_chunks_bounds_resume_traces():
+    """Power-of-two chunking: cuts are block-aligned, cover the span, and
+    the set of distinct chunk lengths over ANY workload is O(log + blk)."""
+    from repro.core.state import bucket_chunks
+    blk, max_len = 16, 512
+    lengths = set()
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        pos0 = blk * int(rng.integers(0, 8))
+        end = int(rng.integers(pos0 + 1, max_len))
+        cuts = bucket_chunks(pos0, end, blk)
+        assert cuts[-1] == end
+        assert all(c % blk == 0 for c in cuts[:-1])
+        prev = pos0
+        for c in cuts:
+            lengths.add(c - prev)
+            prev = c
+    bound = (blk - 1) + int(np.log2(max_len // blk)) + 1
+    assert len(lengths) <= bound, (len(lengths), bound)
+
+
+def test_engine_resumed_prefill_trace_count_bounded():
+    """Diverse suffix lengths behind a shared prefix compile a bounded set
+    of resumed-chunk lengths (the ROADMAP retrace fix)."""
+    model, cfg, params = _setup(seed=8)
+    pc = PrefixCache(max_bytes=1 << 22)
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=256,
+                      prefix_cache=pc)
+    rng = np.random.default_rng(8)
+    shared = rng.integers(0, cfg.vocab_size, 2 * BLK)
+    for i in range(12):                   # 12 distinct total lengths
+        sfx = rng.integers(0, cfg.vocab_size, 3 + 7 * i)
+        eng.submit(jnp.asarray(np.concatenate([shared, sfx]), jnp.int32), 2)
+    eng.run()
+    assert pc.hits >= 1
+    # every compiled chunk length is a power-of-two multiple of the block
+    # (or a sub-block tail), so the trace count is bounded by
+    # blk - 1 + log2(max_len / blk) + 1 NO MATTER how many distinct
+    # suffix lengths the workload brings — unlike the pre-bucketing
+    # behavior (one trace per distinct suffix length, unbounded)
+    bound = (BLK - 1) + int(np.log2(eng.max_len // BLK)) + 1
+    assert len(eng._resume_lens) <= bound
+    for n in eng._resume_lens:
+        assert n < BLK or (n % BLK == 0 and (n // BLK).bit_count() == 1), n
 
 
 def test_deep_snapshot_hit_survives_seen_key_eviction():

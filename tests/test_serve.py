@@ -227,6 +227,64 @@ def test_free_slot_tokens_preserved_between_retire_and_admit():
         outs[2].tokens, _ref_tokens(model, cfg, params, prompts[2], 6))
 
 
+def test_ssm_family_engine_matches_generate():
+    """The slot machinery is family-agnostic through DecodeState: an
+    SSM-family (mamba2) engine bit-matches its solo generate() runs,
+    mixed prompt lengths sharing a batch."""
+    cfg = get_config("mamba2-780m", smoke=True).replace(lt_block_size=16)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(9))
+    prompts = _prompts(cfg, [5, 19, 33], seed=9)
+    eng = ServeEngine(model, cfg, params, slots=3, max_len=64)
+    for p in prompts:
+        eng.submit(p, 6)
+    outs = {o.rid: o for o in eng.run()}
+    for rid, p in enumerate(prompts):
+        np.testing.assert_array_equal(
+            outs[rid].tokens, _ref_tokens(model, cfg, params, p, 6))
+
+
+def test_audio_model_rejected_without_decode_state():
+    cfg = get_config("whisper-large-v3", smoke=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    assert model.state is None
+    with pytest.raises(NotImplementedError):
+        ServeEngine(model, cfg, params, slots=1, max_len=32)
+
+
+def test_logprobs_match_model_distribution():
+    """logprobs=True reports log p(sampled token) under the raw model
+    distribution for every emitted token (first token included), exactly
+    matching a stepwise replay; logprobs=False reports None."""
+    model, cfg, params = _setup(seed=10)
+    prompt = _prompts(cfg, [9], seed=10)[0]
+    steps = 5
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=32, logprobs=True)
+    eng.submit(prompt, steps)
+    out = eng.run()[0]
+    assert out.logprobs is not None and out.logprobs.shape == (steps,)
+
+    st = model.state
+    logits, cache = st.prefill(params, prompt[None],
+                               st.init_slot(params, 32))
+    want = []
+    pos = prompt.shape[0]
+    for t, tok in enumerate(out.tokens):
+        lsm = jax.nn.log_softmax(logits[0].astype(jnp.float32))
+        want.append(float(lsm[int(tok)]))
+        if t + 1 < len(out.tokens):
+            logits, cache = st.decode_step(
+                params, jnp.asarray([[int(tok)]], jnp.int32),
+                jnp.asarray(pos + t, jnp.int32), cache)
+    np.testing.assert_allclose(out.logprobs, np.asarray(want, np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+    eng2 = ServeEngine(model, cfg, params, slots=1, max_len=32)
+    eng2.submit(prompt, 2)
+    assert eng2.run()[0].logprobs is None
+
+
 def test_engine_accounting():
     model, cfg, params = _setup()
     eng = ServeEngine(model, cfg, params, slots=2, max_len=32)
