@@ -114,10 +114,32 @@ class KVCache(NamedTuple):
     pos: jax.Array  # ()
 
 
+class RingKVCache(NamedTuple):
+    """Sliding-window ring KV state (local_attn mixers).
+
+    Same field layout as KVCache but a distinct *type*: the ring holds the
+    last min(pos, W) tokens' post-RoPE k/v at slot = absolute_pos % W, so
+    the whole node is a constant-size O(W) suffix-window snapshot — unlike
+    the append-only KVCache whose buffers grow with max_len and admit no
+    constant-size snapshot. core.state dispatches snapshot ops by node
+    type, which is why the ring gets its own.
+    """
+    k: jax.Array    # (B, Hkv, W, h)
+    v: jax.Array    # (B, Hkv, W, h)
+    pos: jax.Array  # ()
+
+
 def init_kv_cache(batch, n_kv_heads, head_dim, max_len, dtype=jnp.float32) -> KVCache:
     shape = (batch, n_kv_heads, max_len, head_dim)
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
                    pos=jnp.zeros((), jnp.int32))
+
+
+def init_ring_cache(batch, n_kv_heads, head_dim, window,
+                    dtype=jnp.float32) -> RingKVCache:
+    shape = (batch, n_kv_heads, window, head_dim)
+    return RingKVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                       pos=jnp.zeros((), jnp.int32))
 
 
 def kv_ring_decode_step(cache: KVCache, q, k, v, *, scale: float | None = None):
@@ -141,7 +163,108 @@ def kv_ring_decode_step(cache: KVCache, q, k, v, *, scale: float | None = None):
     logits = jnp.where(valid[None, None, None, :], logits, jnp.finfo(jnp.float32).min)
     wts = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bngs,bnsh->bngh", wts, vc.astype(jnp.float32))
-    return out.reshape(bsz, hq, hd).astype(v.dtype), KVCache(kc, vc, cache.pos + 1)
+    return (out.reshape(bsz, hq, hd).astype(v.dtype),
+            type(cache)(kc, vc, cache.pos + 1))
+
+
+def ring_grid(block_size: int, window: int) -> int:
+    """Sub-block lattice for kv_ring prefill: the largest divisor of the
+    resume grid (lt_block_size) that fits the ring. Divisibility keeps any
+    block-aligned resume on the same lattice as a cold prefill (the
+    bit-exactness contract); <= window keeps one sub-block's ring writes on
+    distinct slots."""
+    g = min(block_size, window)
+    while block_size % g:
+        g -= 1
+    return g
+
+
+def kv_ring_prefill(cache: RingKVCache, q, k, v, *, grid: int,
+                    scale: float | None = None):
+    """Sliding-window softmax prefill resuming from a ring cache.
+
+    q: (B, Hq, S, h); k, v: (B, Hkv, S, h) — post-RoPE, at absolute
+    positions cache.pos .. cache.pos + S - 1. Returns (out (B, Hq, S, h),
+    new RingKVCache covering cache.pos + S tokens).
+
+    The segment is processed on a fixed `grid`-token sub-block lattice
+    anchored at absolute position 0 (`grid` from ring_grid; cache.pos must
+    be a lattice multiple): each scan step attends its sub-block's queries
+    over [ring (W), sub-block (grid)] with fixed shapes and masks derived
+    only from the sub-block's base position, then writes the sub-block's
+    k/v into ring slots (base + i) % W. Every sub-block's arithmetic is
+    therefore independent of where the call started, so a prefill resumed
+    from a snapshot at any lattice-aligned cut is bit-identical to the
+    cold prefill of the full concatenated prompt — the DecodeState
+    snapshot contract that unlocks prefix reuse for ring-window models.
+    """
+    bsz, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    w = cache.k.shape[2]
+    if grid > w:
+        raise ValueError(f"grid({grid}) must be <= ring window({w})")
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    f32 = jnp.float32
+    nb = -(-s // grid)
+    pad = nb * grid - s
+
+    def blocks(x):  # (B, H*, S, h) -> (nb, B, H*, grid, h)
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((*x.shape[:2], pad, x.shape[-1]), x.dtype)],
+                axis=2)
+        return jnp.moveaxis(
+            x.reshape(*x.shape[:2], nb, grid, x.shape[-1]), 2, 0)
+
+    qb = blocks(q)                                    # (nb, B, Hq, grid, h)
+    kb, vb = blocks(k), blocks(v)
+    bases = cache.pos + jnp.arange(nb, dtype=jnp.int32) * grid
+    nval = jnp.minimum(jnp.asarray(s, jnp.int32) - jnp.arange(nb) * grid,
+                       grid)
+
+    i = jnp.arange(grid)                              # query local index
+    j2 = jnp.arange(grid)                             # sub-block key index
+    t = jnp.arange(w)                                 # ring slot index
+
+    def step(carry, xs):
+        rk, rv = carry
+        qj, kj, vj, base, nv = xs
+        p = base + i                                  # absolute query pos
+        # latest absolute position written to ring slot t (negative if the
+        # slot was never written): the unique value in [base - W, base - 1]
+        # congruent to t mod W
+        abs_t = base - w + jnp.mod(t - base, w)
+        ring_ok = (abs_t[None, :] >= 0) & (abs_t[None, :] > p[:, None] - w)
+        loc_ok = ((j2[None, :] <= i[:, None])
+                  & (j2[None, :] > i[:, None] - w)
+                  & (j2[None, :] < nv))
+        mask = jnp.concatenate([ring_ok, loc_ok], axis=1)  # (grid, W+grid)
+        kcat = jnp.concatenate([rk, kj.astype(rk.dtype)], axis=2).astype(f32)
+        vcat = jnp.concatenate([rv, vj.astype(rv.dtype)], axis=2).astype(f32)
+        qg = qj.reshape(bsz, hkv, g, grid, hd).astype(f32)
+        logits = jnp.einsum("bngqh,bnkh->bngqk", qg, kcat) * scale
+        logits = jnp.where(mask[None, None, None], logits,
+                           jnp.finfo(f32).min)
+        wts = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bngqk,bnkh->bngqh", wts, vcat)
+        # masked ring write: padded tail positions must not clobber slots
+        # still holding live (older) tokens
+        slots = jnp.mod(p, w)                         # distinct (grid <= W)
+        wm = (i < nv)[None, None, :, None]
+        rk = rk.at[:, :, slots].set(jnp.where(wm, kj.astype(rk.dtype),
+                                              rk[:, :, slots]))
+        rv = rv.at[:, :, slots].set(jnp.where(wm, vj.astype(rv.dtype),
+                                              rv[:, :, slots]))
+        return (rk, rv), out
+
+    (rk, rv), outs = jax.lax.scan(step, (cache.k, cache.v),
+                                  (qb, kb, vb, bases, nval))
+    out = jnp.moveaxis(outs, 0, 3)                    # (B,Hkv,g,nb,grid,h)
+    out = out.reshape(bsz, hq, nb * grid, hd)[:, :, :s]
+    return (out.astype(v.dtype),
+            RingKVCache(rk, rv, cache.pos + jnp.asarray(s, jnp.int32)))
 
 
 def poly_kv_decode_step(cache: KVCache, q, k, v, *, degree: int, scale: float):

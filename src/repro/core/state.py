@@ -33,10 +33,11 @@ Snapshot granularity semantics (per kind, composed over a model's kinds):
     snapshot simply omits (polysketch).
   - ``"token"`` — the state covers exactly the tokens prefilled so far
     (no tail buffer), so taking a snapshot at a block boundary requires
-    *splitting* the prefill there (SSM / RG-LRU). Snapshots are only
-    bit-reproducible at the lt_block_size chunk grid the recurrent
-    prefill scans over.
-  - ``None``    — no constant-size snapshot exists (ring / full KV).
+    *splitting* the prefill there (SSM / RG-LRU / ring KV, whose O(W)
+    window is a constant-size suffix state). Snapshots are only
+    bit-reproducible at the lt_block_size chunk grid the resumable
+    prefills scan over.
+  - ``None``    — no constant-size snapshot exists (full KV).
 
 A model mixing kinds gets the weakest member: any ``None`` disables
 snapshots; any ``"token"`` member forces the split-at-boundary behavior.
@@ -87,9 +88,23 @@ def _rec_restore(fresh: dec.RecurrentCache, snap: dec.RecurrentCache,
                               conv=snap.conv.astype(fresh.conv.dtype))
 
 
+def _ring_snapshot(node: dec.RingKVCache):
+    # the whole node is O(W): the ring holds exactly the last min(pos, W)
+    # tokens, which is the entire state a sliding-window resume needs
+    return node
+
+
+def _ring_restore(fresh: dec.RingKVCache, snap: dec.RingKVCache, n_tokens):
+    return dec.RingKVCache(
+        k=snap.k.astype(fresh.k.dtype), v=snap.v.astype(fresh.v.dtype),
+        pos=jnp.broadcast_to(jnp.asarray(n_tokens, fresh.pos.dtype),
+                             fresh.pos.shape))
+
+
 NODE_OPS: dict[type, NodeOps] = {
     dec.PolysketchCache: NodeOps("block", _psk_snapshot, _psk_restore),
     dec.RecurrentCache: NodeOps("token", _rec_snapshot, _rec_restore),
+    dec.RingKVCache: NodeOps("token", _ring_snapshot, _ring_restore),
     dec.KVCache: NodeOps(None, None, None),
 }
 
@@ -173,9 +188,9 @@ register_state(StateSpec(
         batch, cfg.n_kv_heads, cfg.resolved_head_dim, max_len, dtype)))
 
 register_state(StateSpec(
-    kind="kv_ring", node_type=dec.KVCache,
-    granularity=None, resumable=False,
-    init=lambda cfg, batch, max_len, dtype: dec.init_kv_cache(
+    kind="kv_ring", node_type=dec.RingKVCache,
+    granularity="token", resumable=True,
+    init=lambda cfg, batch, max_len, dtype: dec.init_ring_cache(
         batch, cfg.n_kv_heads, cfg.resolved_head_dim,
         min(cfg.sliding_window, max_len), dtype)))
 
@@ -237,7 +252,8 @@ def deserialize_snapshot(data: bytes, treedef):
 # resumed-prefill bucketing
 # ---------------------------------------------------------------------------
 
-def bucket_chunks(pos0: int, end: int, block_size: int) -> list[int]:
+def bucket_chunks(pos0: int, end: int, block_size: int,
+                  max_blocks: int | None = None) -> list[int]:
     """Split [pos0, end) into power-of-two multiples of block_size (largest
     first) plus one final sub-block tail; returns the absolute cut points
     (ascending, last == end).
@@ -246,19 +262,61 @@ def bucket_chunks(pos0: int, end: int, block_size: int) -> list[int]:
     contract for block-granularity states), and the set of possible chunk
     lengths over ANY workload is {block_size * 2^i} plus the < block_size
     tails — so a jitted per-chunk-length prefill compiles O(log(max_len) +
-    block_size) traces instead of one per distinct suffix length."""
+    block_size) traces instead of one per distinct suffix length.
+
+    ``max_blocks`` caps every chunk at that many blocks (rounded down to a
+    power of two, min 1): the overlapped serve scheduler uses it to keep
+    each chunk's device time under the per-tick prefill budget, so a long
+    prompt becomes a run of equal budget-sized chunks instead of one
+    monolithic power-of-two dispatch — same bounded trace set, preemptible
+    between every cut."""
     if end <= pos0:
         return []
+    cap = None
+    if max_blocks is not None:
+        cap = 1 << (max(1, max_blocks).bit_length() - 1)
     m, t = divmod(end - pos0, block_size)
     cuts, pos = [], pos0
     while m:
         p = 1 << (m.bit_length() - 1)
+        if cap is not None:
+            p = min(p, cap)
         pos += p * block_size
         cuts.append(pos)
         m -= p
     if t:
         cuts.append(end)
     return cuts
+
+
+# ---------------------------------------------------------------------------
+# partial prefill: a first-class, schedulable in-flight prefill
+# ---------------------------------------------------------------------------
+
+class PartialPrefill(NamedTuple):
+    """The carry of a chunked prefill, paused between chunks.
+
+    The overlapped serve scheduler spreads one prompt's prefill across
+    many engine ticks; between chunks the in-flight work is exactly this
+    value — and because every pause point is on the model's block grid,
+    a paused prefill is itself snapshot-able (``partial_snapshot``) and
+    therefore evictable: a half-prefilled slot can be shelved as a
+    constant-size snapshot and re-materialized later, or handed to
+    another request sharing the same prefix.
+
+    state:    the model cache pytree covering the first n_tokens tokens.
+    n_tokens: host int; block-aligned at every pause point (only the final
+              chunk may land off-grid, and then the prefill is complete).
+    logits:   (1, V) last-position logits of the latest chunk (None before
+              the first chunk lands).
+    """
+    state: object
+    n_tokens: int
+    logits: object = None
+
+    @property
+    def started(self) -> bool:
+        return self.logits is not None
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +424,40 @@ class DecodeState:
             probe = self.snapshot(self.init_slot(None, self.block_size))
             self._snap_treedef = jax.tree_util.tree_structure(probe)
         return deserialize_snapshot(data, self._snap_treedef)
+
+    # -- partial prefill (chunked/overlapped admission) --------------------
+
+    def begin_partial(self, params, max_len: int) -> PartialPrefill:
+        """A fresh, zero-token partial prefill (cold start)."""
+        return PartialPrefill(self.init_slot(params, max_len), 0)
+
+    def advance_partial(self, params, tokens, part: PartialPrefill
+                        ) -> PartialPrefill:
+        """Run one more chunk; tokens (1, S) continue at part.n_tokens.
+        Serving hot paths use the engine's jitted resume instead — this is
+        the protocol-level (unjitted) reference path."""
+        logits, state = self.resume(params, tokens, part.state,
+                                    part.n_tokens)
+        return PartialPrefill(state, part.n_tokens + tokens.shape[1], logits)
+
+    def partial_snapshot(self, part: PartialPrefill):
+        """Constant-size snapshot of a paused prefill -> (snapshot, pos).
+        Valid at block-grid pause points only (which is every pause point
+        the scheduler produces)."""
+        if part.n_tokens % self.block_size:
+            raise ValueError(
+                f"partial prefill paused off-grid ({part.n_tokens} tokens, "
+                f"block {self.block_size}): not snapshotable")
+        return self.snapshot(part.state), part.n_tokens
+
+    def partial_restore(self, params, snapshot, n_tokens: int,
+                        max_len: int) -> PartialPrefill:
+        """Re-materialize a paused prefill from its snapshot. The restored
+        carry has no logits yet (a pause point always has at least one
+        chunk left to run, which re-establishes them)."""
+        state = self.restore(self.init_slot(params, max_len), snapshot,
+                             jnp.asarray(n_tokens, jnp.int32))
+        return PartialPrefill(state, int(n_tokens))
 
     # -- slot stacking (continuous batching) -------------------------------
 

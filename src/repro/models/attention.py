@@ -161,6 +161,15 @@ def attention_apply(params, cfg, x, *, kind: str, positions, mode: str,
                                causal=True, impl=impl)
         if mode == "prefill":
             cache = _fill_kv(cache, k, v)
+    elif kind == "local_attn" and mode == "prefill":
+        # resumable ring prefill on a fixed sub-block lattice: the segment
+        # continues at cache.pos (a block-grid multiple), attends through
+        # the ring's window of earlier tokens, and is bit-identical to a
+        # cold prefill of the full concatenation — the snapshot/resume
+        # contract that gives sliding-window models prefix reuse
+        y, cache = dec.kv_ring_prefill(
+            cache, q, k, v,
+            grid=dec.ring_grid(cfg.lt_block_size, cache.k.shape[2]))
     else:
         g = cfg.n_heads // k.shape[1]
         kr = jnp.repeat(k, g, axis=1) if g > 1 else k
@@ -170,19 +179,7 @@ def attention_apply(params, cfg, x, *, kind: str, positions, mode: str,
         else:
             y = softmax_attention_full(q, kr, vr, causal=True)
         if mode == "prefill":
-            if kind == "local_attn":
-                w = cache.k.shape[2]
-                s = k.shape[2]
-                if s >= w:
-                    # last w tokens land in ring order
-                    idx = (jnp.arange(s - w, s)) % w
-                    kc = cache.k.at[:, :, idx].set(k[:, :, -w:].astype(cache.k.dtype))
-                    vc = cache.v.at[:, :, idx].set(v[:, :, -w:].astype(cache.v.dtype))
-                    cache = dec.KVCache(kc, vc, jnp.asarray(s, jnp.int32))
-                else:
-                    cache = _fill_kv(cache, k, v)
-            else:
-                cache = _fill_kv(cache, k, v)
+            cache = _fill_kv(cache, k, v)
     return _out(params, y), cache
 
 

@@ -1,13 +1,15 @@
-from repro.core.state import DecodeState, bucket_chunks
+from repro.core.state import DecodeState, PartialPrefill, bucket_chunks
 from repro.serve.engine import (GenerationResult, Request, RequestOutput,
                                 ServeEngine, generate, make_serve_fns)
 from repro.serve.prefix_cache import (PrefixCache, params_fingerprint,
                                       snapshot_nbytes)
 from repro.serve.sampling import (SamplingParams, SlotSampling, request_key,
-                                  sample_step, sample_token)
+                                  sample_first, sample_step, sample_token)
+from repro.serve.scheduler import PrefillJob, PrefillScheduler
 
-__all__ = ["DecodeState", "GenerationResult", "PrefixCache", "Request",
+__all__ = ["DecodeState", "GenerationResult", "PartialPrefill",
+           "PrefillJob", "PrefillScheduler", "PrefixCache", "Request",
            "RequestOutput", "SamplingParams", "ServeEngine", "SlotSampling",
            "bucket_chunks", "generate", "make_serve_fns",
-           "params_fingerprint", "request_key", "sample_step",
-           "sample_token", "snapshot_nbytes"]
+           "params_fingerprint", "request_key", "sample_first",
+           "sample_step", "sample_token", "snapshot_nbytes"]

@@ -12,13 +12,30 @@ recurrent-state models — any model whose `Model.state` is non-None.
 The engine keeps a fixed number of decode *slots*. Every slot owns an
 independent cache slice (the model's decode-state pytree at batch 1,
 stacked over a leading slot axis so each slot carries its own ``pos``).
-Admission prefills ONE request at its native prompt length (no padding
-into attention) and scatters the resulting cache into the free slot with a
-jitted `dynamic_update_index_in_dim`; live slots are never touched. Decode
-runs all slots lockstep through one jitted, slot-vmapped tick; free
-slots decode along on stale state (their outputs are never read, and
-admission rewrites the whole slot slice — cache, token, pos) until the
-queue refills them.
+Admission runs through a chunked prefill scheduler
+(serve/scheduler.py): each request's prompt is split into power-of-two
+block-bucketed chunks, and every tick dispatches at most a
+``prefill_budget`` worth of chunk work before the lockstep decode tick —
+so a long prompt admits incrementally across ticks instead of stalling
+every live request for its whole prefill. The finished prefill (carried
+between chunks as a core.state.PartialPrefill) is scattered into the free
+slot with a jitted `dynamic_update_index_in_dim`; live slots are never
+touched. Decode runs all slots lockstep through one jitted, slot-vmapped
+tick; free slots decode along on stale state (their outputs are never
+read, and admission rewrites the whole slot slice — cache, token, pos)
+until the queue refills them.
+
+With ``overlap=True`` the tick pipeline is double-buffered: prefill
+chunks and the decode tick are dispatched asynchronously (no
+block_until_ready anywhere in admission), and the host syncs only on the
+*previous* tick's sampled tokens — one tick of lag between a token being
+computed and the host observing it. Retirement decisions therefore lag
+one tick too; the single decode step a slot may run past its EOS is
+dropped at sync (its request id no longer matches), so emitted tokens are
+bit-identical to the lockstep engine's. Decode throughput stays flat
+while long prompts admit, which is the whole point: the O(1)-state
+families make prefill preemptible at block granularity, and this engine
+cashes that in as stall-free admission.
 
 With a `PrefixCache` attached (legal whenever the model's
 `snapshot_granularity` is non-None — polysketch, SSM, RG-LRU), admission
@@ -45,12 +62,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.state import bucket_chunks
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampling import (SamplingParams, device_scalars,
                                   init_slot_keys, init_slot_sampling,
-                                  request_key, sample_step,
-                                  set_slot_sampling)
+                                  request_key, sample_first, sample_step)
+from repro.serve.scheduler import PrefillScheduler
 
 
 def make_serve_fns(model, cfg):
@@ -158,13 +174,33 @@ class RequestOutput:
 @dataclass
 class _Slot:
     request: Request | None = None
+    prefilling: bool = False     # reserved: prefill in flight, not decoding
     emitted: list[int] = field(default_factory=list)
     lps: list[float] = field(default_factory=list)
     ttft_s: float = 0.0
+    last_tok_s: float | None = None  # inter-token latency tracking
 
     @property
     def free(self) -> bool:
         return self.request is None
+
+    @property
+    def decoding(self) -> bool:
+        return self.request is not None and not self.prefilling
+
+
+@dataclass
+class _TickRecord:
+    """One dispatched decode tick, not yet synced (the overlap pipeline's
+    double buffer). `rids` pins which request occupied each slot at
+    dispatch time: a slot retired (and possibly re-admitted) between
+    dispatch and sync drops its speculative token via the rid mismatch."""
+    toks: object                 # (slots,) device array
+    lps: object
+    active: np.ndarray           # dispatch-time decoding mask
+    rids: list[int | None]
+    firsts: list[tuple]          # (slot, rid, tok_dev, lp_dev) admissions
+    t_dispatch: float
 
 
 class ServeEngine:
@@ -192,13 +228,22 @@ class ServeEngine:
     `min_snapshot_blocks` is the prefix-cache admission cost floor: only
     prefixes of at least that many blocks are snapshotted or promoted
     (1 = snapshot everything, the default).
+
+    `prefill_budget` (prompt tokens per tick, None = unlimited) bounds how
+    much admission prefill work each tick dispatches ahead of its decode
+    step — the knob that trades time-to-first-token against decode-tick
+    jitter. `overlap=True` additionally pipelines the host: chunk and tick
+    dispatches never block, and tokens are synced one tick late (emitted
+    tokens stay bit-identical to the lockstep engine's).
     """
 
     def __init__(self, model, cfg, params, *, slots: int = 4,
                  max_len: int = 4096,
                  prefix_cache: PrefixCache | None = None,
                  min_snapshot_blocks: int = 1,
-                 logprobs: bool = False):
+                 logprobs: bool = False,
+                 prefill_budget: int | None = None,
+                 overlap: bool = False):
         if model.state is None:
             raise NotImplementedError(
                 f"{cfg.name!r} exposes no DecodeState; ServeEngine serves "
@@ -213,10 +258,12 @@ class ServeEngine:
         self.max_len = max_len
         self.min_snapshot_blocks = min_snapshot_blocks
         self.logprobs = logprobs
+        self.overlap = overlap
         self.queue: deque[Request] = deque()
         self.finished: list[RequestOutput] = []
         self._next_rid = 0
         self._slots = [_Slot() for _ in range(slots)]
+        self._pending: _TickRecord | None = None  # overlap double buffer
 
         state = self.state
 
@@ -240,7 +287,16 @@ class ServeEngine:
                     f"{'/'.join(state.kinds)} declare no constant-size "
                     "snapshot)")
             prefix_cache.bind_block_size(state.block_size)
-            prefix_cache.bind_params(params)  # snapshots are weight-specific
+            # snapshots are weight-specific AND shape-specific: a ring-KV
+            # snapshot embeds the engine's window (min(sliding_window,
+            # max_len)), so the binding fingerprints the snapshot leaf
+            # shapes too — engines differing only in max_len share
+            # snapshots exactly when the shapes agree
+            probe = jax.eval_shape(
+                lambda: state.snapshot(state.init_slot(params, max_len)))
+            sig = repr([(leaf.shape, str(leaf.dtype)) for leaf in
+                        jax.tree_util.tree_leaves(probe)]).encode()
+            prefix_cache.bind_params(params, state_sig=sig)
             prefix_cache.bind_codec(state.serialize, state.deserialize)
         # distinct resumed-chunk lengths ever compiled (bounded by the
         # power-of-two bucketing; asserted in tests)
@@ -269,16 +325,31 @@ class ServeEngine:
             return state.restore(state.init_slot(params, self.max_len),
                                  snapshot, n_tokens)
 
-        def sample_first(logits, key, temperature, top_k, top_p, greedy):
-            # logits (1, V): the request's prefill last-position logits.
-            # First split of the request's PRNG stream happens here.
-            tok, key = sample_step(key, logits[0], temperature, top_k,
-                                   top_p, greedy)
-            if self.logprobs:
-                lp = jax.nn.log_softmax(logits[0].astype(jnp.float32))[tok]
-            else:
-                lp = jnp.zeros((), jnp.float32)
-            return tok[None], key, lp
+        def first_token(logits, key, temperature, top_k, top_p, greedy):
+            # logits (1, V): the request's prefill last-position logits
+            # (self.logprobs is trace-static)
+            return sample_first(logits, key, temperature, top_k, top_p,
+                                greedy, logprobs=self.logprobs)
+
+        def install_slot(caches, toks, pos, keys, samp, cache, logits,
+                         base_key, si, s0, t, k, p, g):
+            # whole-slot install as ONE jitted dispatch with a TRACED slot
+            # index: first-token sampling off the final prefill chunk's
+            # logits, cache scatter, and the token/pos/key/params writes.
+            # A per-field eager `.at[si].set` would compile per slot index
+            # and could stall an admission tick mid-run; this is one trace
+            # for every slot.
+            tok, key, lp = first_token(logits, base_key, t, k, p, g)
+            caches = state.slot_scatter(caches, cache, si)
+            toks = jax.lax.dynamic_update_index_in_dim(
+                toks, tok[:, None], si, axis=0)
+            pos = jax.lax.dynamic_update_index_in_dim(pos, s0, si, axis=0)
+            keys = jax.lax.dynamic_update_index_in_dim(keys, key, si, axis=0)
+            samp = jax.tree_util.tree_map(
+                lambda full, v: jax.lax.dynamic_update_index_in_dim(
+                    full, v.astype(full.dtype), si, axis=0),
+                samp, type(samp)(t, k, p, g))
+            return caches, toks, pos, keys, samp, tok, lp
 
         def decode_one(params, tok, pos, cache):
             logits, cache = state.decode_step(params, tok, pos, cache)
@@ -329,16 +400,31 @@ class ServeEngine:
             return out, lps, new_toks, new_pos, new_keys, caches
 
         # The slot-stacked cache is donated on both hot paths (decode tick,
-        # admission scatter) so XLA updates it in place instead of copying
-        # the full cache pytree every generated token; callers must treat
-        # the cache they pass in as consumed.
+        # slot install) so XLA updates it in place instead of copying the
+        # full cache pytree every generated token; callers must treat the
+        # cache they pass in as consumed.
         self._prefill = jax.jit(prefill_one)
         self._prefill_resume = jax.jit(prefill_resume)
         self._fresh_slot = jax.jit(fresh_slot)
         self._restore = jax.jit(restore)
-        self._sample_first = jax.jit(sample_first)
+        self._install_slot = jax.jit(install_slot, donate_argnums=(0,))
         self._decode = jax.jit(decode_all, donate_argnums=(5,))
-        self._scatter = jax.jit(self.state.slot_scatter, donate_argnums=(0,))
+
+        # the chunked admission scheduler drives the jitted prefill fns;
+        # all its dispatches are asynchronous (the host syncs on sampled
+        # tokens only)
+        self.scheduler = PrefillScheduler(
+            state,
+            prefill_fn=lambda toks: self._prefill(self.params, toks),
+            resume_fn=lambda toks, st, pos: self._prefill_resume(
+                self.params, toks, st, jnp.asarray(pos, jnp.int32)),
+            fresh_fn=lambda: self._fresh_slot(self.params),
+            restore_fn=lambda snap, n: self._restore(
+                self.params, snap, jnp.asarray(n, jnp.int32)),
+            prefix_cache=prefix_cache,
+            min_snapshot_blocks=min_snapshot_blocks,
+            budget=prefill_budget,
+            resume_lens=self._resume_lens)
 
         # accounting
         self.total_prefill_s = 0.0
@@ -346,6 +432,16 @@ class ServeEngine:
         self.decode_steps = 0
         self.prefills = 0
         self.sampled_requests = 0
+        # observability windows: bounded deques — a long-lived engine must
+        # not grow host memory per emitted token, and percentiles over the
+        # recent window are what an operator actually watches
+        self._itl: deque[float] = deque(maxlen=65536)
+        self._tick_gaps: deque[float] = deque(maxlen=16384)
+        # gap anchor: the previous tick's sync time within the current
+        # busy streak; None across idle periods, so a bursty workload's
+        # think time between requests never reads as a decode stall
+        self._gap_anchor: float | None = None
+        self._last_sync: float | None = None
 
     # ------------------------------------------------------------------
     # submission / scheduling
@@ -374,11 +470,14 @@ class ServeEngine:
 
     @property
     def n_active(self) -> int:
-        return sum(not s.free for s in self._slots)
+        """Slots with an installed (decoding) request; mid-prefill slots
+        are reserved but not yet decoding."""
+        return sum(s.decoding for s in self._slots)
 
     @property
     def busy(self) -> bool:
-        return bool(self.queue) or self.n_active > 0
+        return (bool(self.queue) or self.scheduler.active
+                or self.n_active > 0 or self._pending is not None)
 
     def _retire(self, si: int, reason: str) -> RequestOutput:
         slot = self._slots[si]
@@ -392,8 +491,10 @@ class ServeEngine:
             logprobs=(np.asarray(slot.lps, np.float32) if self.logprobs
                       else None))
         slot.request = None
+        slot.prefilling = False
         slot.emitted = []
         slot.lps = []
+        slot.last_tok_s = None
         self.finished.append(out)
         return out
 
@@ -406,138 +507,157 @@ class ServeEngine:
             return self._retire(si, "length")
         return None
 
-    def _prefill_cached(self, req: Request):
-        """Prefill through the prefix cache: longest-prefix snapshot
-        restore, bucketed resumed prefill from the match point, snapshot
-        admission.
-
-        Mandatory cut points are the promote boundary (a shared-but-
-        unsnapshotted prefix detected by the PrefixCache) and — for
-        token-granularity states, whose snapshot covers exactly the tokens
-        prefilled so far — the block-aligned truncation the admission
-        snapshot wants. Block-granularity states (polysketch) snapshot the
-        truncation for free from the final state (the tail lives in the
-        buffers). Each segment between cuts is further split into
-        power-of-two block buckets so `_prefill_resume` compiles a bounded
-        set of chunk lengths. All cut points are block-aligned, so every
-        intermediate state is itself a valid snapshot and the whole
-        resumed prefill is bit-identical to a cold one."""
-        pc = self.prefix_cache
-        plen = int(req.prompt.shape[0])
-        blk = pc.block_size
-        plan = pc.plan(np.asarray(req.prompt),
-                       min_blocks=self.min_snapshot_blocks)
-
-        snap_at = {}                       # cut position -> chain key
-        if plan.n_promote:
-            snap_at[plan.n_promote] = plan.promote_key
-        want_trunc = (bool(plan.trunc_key) and plan.n_trunc > plan.n_restore
-                      and plan.n_trunc != plan.n_promote)
-        split_trunc = (want_trunc and plan.n_trunc < plen
-                       and self.state.snapshot_granularity == "token")
-        if split_trunc:
-            snap_at[plan.n_trunc] = plan.trunc_key
-
-        if plan.n_restore:
-            cache = self._restore(self.params, plan.snapshot,
-                                  jnp.asarray(plan.n_restore, jnp.int32))
-        else:
-            cache = self._fresh_slot(self.params)
-
-        cuts, pos = [], plan.n_restore
-        for cut in sorted(set(snap_at) | {plen}):
-            if cut > pos:
-                cuts.extend(bucket_chunks(pos, cut, blk))
-                pos = cut
-        logits, pos = None, plan.n_restore
-        for cut in cuts:
-            chunk = req.prompt[pos:cut][None]
-            self._resume_lens.add(cut - pos)
-            logits, cache = self._prefill_resume(
-                self.params, chunk, cache, jnp.asarray(pos, jnp.int32))
-            key = snap_at.get(cut)
-            if key:
-                pc.insert(key, cut, self.state.snapshot(cache))
-            pos = cut
-        if want_trunc and not split_trunc:
-            # block granularity (the final state's prefix matrix covers
-            # exactly the truncation; the tail sits in the buffers), or a
-            # block-aligned prompt whose final state IS the truncation
-            pc.insert(plan.trunc_key, plan.n_trunc,
-                      self.state.snapshot(cache))
-        return logits, cache
-
-    def _admit(self) -> list[RequestOutput]:
-        """Fill free slots from the queue (FIFO). Prefill is per-request at
-        its native length; only the target slot's cache slice is written."""
-        done = []
+    def _start_admissions(self):
+        """Reserve free slots for queued requests (FIFO) and hand their
+        prefills to the chunked scheduler. No device work beyond the plan's
+        snapshot restore is dispatched here; chunks flow from
+        scheduler.tick() under the per-tick budget."""
         for si, slot in enumerate(self._slots):
-            if not slot.free:
-                continue
             if not self.queue:
                 break
+            if not slot.free:
+                continue
             req = self.queue.popleft()
-            t0 = time.perf_counter()
-            if self.prefix_cache is not None:
-                logits, cache = self._prefill_cached(req)
-            else:
-                logits, cache = self._prefill(self.params, req.prompt[None])
-            # first token: sampled from the prefill logits with the
-            # request's own PRNG stream (request_key(seed) — independent of
-            # the slot index, so placement never changes the tokens)
-            tok, key, lp = self._sample_first(
-                logits, request_key(req.sampling.seed),
-                *device_scalars(req.sampling))
-            tok = jax.block_until_ready(tok)
-            self.total_prefill_s += time.perf_counter() - t0
-            self.prefills += 1
-            if not req.sampling.is_greedy:
-                self.sampled_requests += 1
-
-            s0 = req.prompt.shape[0]
-            self._slot_caches = self._scatter(
-                self._slot_caches, cache, jnp.asarray(si, jnp.int32))
-            self._slot_tokens = self._slot_tokens.at[si, 0, 0].set(tok[0])
-            self._slot_pos = self._slot_pos.at[si].set(s0)
-            self._slot_keys = self._slot_keys.at[si].set(key)
-            self._slot_samp = set_slot_sampling(self._slot_samp, si,
-                                                req.sampling)
-
             slot.request = req
-            slot.emitted = [int(tok[0])]
+            slot.prefilling = True
+            self.scheduler.start(req, si)
+
+    def _install(self, job):
+        """Completed prefill -> slot device state. Every operation here is
+        an async dispatch (first-token sampling off the final chunk's
+        logits, cache scatter, per-slot token/pos/key/params writes): the
+        host does NOT wait for the prefill — the token is synced with the
+        tick record (overlap) or once per step for all admissions
+        (lockstep). The PRNG stream is request_key(seed), independent of
+        the slot index, so placement never changes the tokens."""
+        req, si = job.req, job.slot
+        (self._slot_caches, self._slot_tokens, self._slot_pos,
+         self._slot_keys, self._slot_samp, tok, lp) = self._install_slot(
+            self._slot_caches, self._slot_tokens, self._slot_pos,
+            self._slot_keys, self._slot_samp, job.part.state,
+            job.part.logits, request_key(req.sampling.seed),
+            jnp.asarray(si, jnp.int32),
+            jnp.asarray(req.prompt.shape[0], jnp.int32),
+            *device_scalars(req.sampling))
+        self._slots[si].prefilling = False
+        self.prefills += 1
+        if not req.sampling.is_greedy:
+            self.sampled_requests += 1
+        return (si, req.rid, tok, lp)
+
+    def _note_token(self, slot: _Slot, now: float):
+        if slot.last_tok_s is not None:
+            self._itl.append(now - slot.last_tok_s)
+        slot.last_tok_s = now
+
+    def _append_firsts(self, firsts, done, now: float):
+        """Record admissions' first tokens (host sync per token future —
+        they were dispatched together, so the first wait covers all)."""
+        for si, rid, tok, lp in firsts:
+            slot = self._slots[si]
+            req = slot.request
+            if req is None or req.rid != rid:
+                continue
+            slot.emitted.append(int(np.asarray(tok)[0]))
             if self.logprobs:
-                slot.lps = [float(lp)]
-            slot.ttft_s = time.perf_counter() - req.submit_time
+                slot.lps.append(float(np.asarray(lp)))
+            slot.ttft_s = now - req.submit_time
+            self._note_token(slot, now)
             fin = self._check_finished(si)
             if fin is not None:
                 done.append(fin)
-        return done
 
-    def step(self) -> list[RequestOutput]:
-        """One scheduler tick: admit into free slots, then decode every slot
-        once (lockstep). Returns requests that finished this tick."""
-        done = self._admit()
-        if self.n_active == 0:
-            return done
-        active = np.array([not s.free for s in self._slots])
+    def _dispatch_decode(self, firsts) -> _TickRecord | None:
+        """Dispatch one lockstep decode tick over the installed slots
+        (async). Mid-prefill slots are frozen by the active mask exactly
+        like drained ones. An install always leaves its slot decoding, so
+        admissions' first tokens (`firsts`) always ride a real tick
+        record."""
+        active = np.array([s.decoding for s in self._slots])
+        if not active.any():
+            assert not firsts, "installed slots must be decoding"
+            return None
+        rids = [s.request.rid if s.decoding else None for s in self._slots]
         t0 = time.perf_counter()
         (toks, lps, self._slot_tokens, self._slot_pos, self._slot_keys,
          self._slot_caches) = self._decode(
             self.params, self._slot_tokens, self._slot_pos, self._slot_keys,
             self._slot_samp, self._slot_caches, jnp.asarray(active))
-        host_toks = np.asarray(toks)          # (slots,) — syncs the step
-        host_lps = np.asarray(lps) if self.logprobs else None
-        self.total_decode_s += time.perf_counter() - t0
         self.decode_steps += 1
+        return _TickRecord(toks, lps, active, rids, firsts, t0)
+
+    def _sync_record(self, rec: _TickRecord, done):
+        """Sync one tick record's tokens to the host and account them.
+        First tokens precede the tick's token in each request's stream, so
+        admissions recorded on this tick are appended first; a slot whose
+        request retired (or was replaced) since dispatch fails the rid
+        check and its speculative token is dropped."""
+        toks = np.asarray(rec.toks)
+        lps = np.asarray(rec.lps) if self.logprobs else None
+        now = time.perf_counter()
+        # NB: with a prefill budget (or overlap), admission chunk work
+        # dispatched ahead of this tick executes on the same device stream
+        # and is absorbed into this wait — decode_s measures the decode
+        # PIPELINE's wall time (the serving cadence), while prefill_s
+        # holds admission host dispatch + lockstep first-token sync time
+        t_ref = (rec.t_dispatch if self._last_sync is None
+                 else max(rec.t_dispatch, self._last_sync))
+        self.total_decode_s += now - t_ref
+        self._last_sync = now
+        if self._gap_anchor is not None:
+            self._tick_gaps.append(now - self._gap_anchor)
+        self._gap_anchor = now
+        self._append_firsts(rec.firsts, done, now)
         for si, slot in enumerate(self._slots):
-            if slot.free:
+            if not rec.active[si]:
                 continue
-            slot.emitted.append(int(host_toks[si]))
+            req = slot.request
+            if req is None or req.rid != rec.rids[si]:
+                continue
+            slot.emitted.append(int(toks[si]))
             if self.logprobs:
-                slot.lps.append(float(host_lps[si]))
+                slot.lps.append(float(lps[si]))
+            self._note_token(slot, now)
             fin = self._check_finished(si)
             if fin is not None:
                 done.append(fin)
+        if not any(s.decoding for s in self._slots) and self._pending is None:
+            # busy streak over (nothing decoding, no tick in flight): the
+            # interval until the next admission's tick is idle time, not a
+            # decode stall
+            self._gap_anchor = None
+
+    def step(self) -> list[RequestOutput]:
+        """One engine tick.
+
+        Lockstep (overlap=False): admit (up to one prefill budget of chunk
+        work, all admissions' first tokens synced together), decode every
+        installed slot once, sync this tick's tokens before returning.
+
+        Overlapped (overlap=True): dispatch chunk work and the decode tick
+        asynchronously, then sync the PREVIOUS tick's tokens — the device
+        computes tick N while the host accounts tick N-1.
+
+        Returns requests that finished this tick."""
+        done: list[RequestOutput] = []
+        self._start_admissions()
+        t0 = time.perf_counter()
+        firsts = [self._install(job) for job in self.scheduler.tick()]
+        if not self.overlap and firsts:
+            # one host sync for every admission this tick (the dispatches
+            # above all ran back-to-back without blocking)
+            jax.block_until_ready(firsts[-1][2])
+        self.total_prefill_s += time.perf_counter() - t0
+        if self.overlap:
+            rec = self._dispatch_decode(firsts)
+            prev, self._pending = self._pending, rec
+            if prev is not None:
+                self._sync_record(prev, done)
+        else:
+            self._append_firsts(firsts, done, time.perf_counter())
+            rec = self._dispatch_decode([])
+            if rec is not None:
+                self._sync_record(rec, done)
         return done
 
     def run(self) -> list[RequestOutput]:
@@ -558,8 +678,24 @@ class ServeEngine:
         self.finished = []
         self.total_prefill_s = self.total_decode_s = 0.0
         self.decode_steps = self.prefills = self.sampled_requests = 0
+        self._itl.clear()
+        self._tick_gaps.clear()
+        self._gap_anchor = None
+        self._last_sync = None
+        self.scheduler.reset_stats()
         if self.prefix_cache is not None:
             self.prefix_cache.reset_stats()
+
+    # TTFT histogram bucket edges (milliseconds, final bucket open-ended)
+    TTFT_EDGES_MS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0,
+                     1000.0, float("inf"))
+
+    @staticmethod
+    def _pcts(xs, ps=(50, 95, 99)):
+        if not len(xs):
+            return {f"p{p}": 0.0 for p in ps}
+        arr = np.asarray(xs, np.float64)
+        return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
 
     def stats(self) -> dict:
         # still-resident requests count too: total_decode_s includes the
@@ -571,7 +707,15 @@ class ServeEngine:
         # first token of every request comes from the prefill logits, so
         # decode throughput counts only decode-step-produced tokens
         decode_tokens = (sum(o.decode_steps for o in self.finished)
-                         + sum(len(s.emitted) - 1 for s in live))
+                         + sum(max(len(s.emitted) - 1, 0) for s in live))
+        ttfts_ms = [o.ttft_s * 1e3 for o in self.finished]
+        edges = np.asarray(self.TTFT_EDGES_MS)
+        counts = np.zeros(len(edges), np.int64)
+        if ttfts_ms:
+            counts = np.bincount(np.searchsorted(edges[:-1], ttfts_ms,
+                                                 side="left"),
+                                 minlength=len(edges))
+        gaps_ms = np.asarray(self._tick_gaps) * 1e3
         out = {
             "requests": len(self.finished),
             "active_requests": len(live),
@@ -583,6 +727,23 @@ class ServeEngine:
             "decode_s": self.total_decode_s,
             "decode_tok_per_s": (decode_tokens / self.total_decode_s
                                  if self.total_decode_s else 0.0),
+            # observability for the stall this engine's scheduler removes:
+            # inter-token latency across all requests, TTFT distribution,
+            # and the host-observed gap between CONSECUTIVE decode-tick
+            # completions within a busy streak — idle periods between
+            # bursts are excluded, so an admission that stalls decode
+            # shows up as a max gap far above the median while think time
+            # between requests never does (recent bounded window)
+            "itl_ms": self._pcts([g * 1e3 for g in self._itl]),
+            "ttft_ms": self._pcts(ttfts_ms),
+            "ttft_hist": {"edges_ms": list(self.TTFT_EDGES_MS),
+                          "counts": counts.tolist()},
+            "tick_gap_ms": {
+                **self._pcts(gaps_ms),
+                "median": float(np.median(gaps_ms)) if len(gaps_ms) else 0.0,
+                "max": float(gaps_ms.max()) if len(gaps_ms) else 0.0,
+            },
+            "scheduler": self.scheduler.stats(),
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()

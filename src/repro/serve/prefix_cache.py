@@ -102,7 +102,7 @@ class _Entry:
 
 @dataclass
 class PrefillPlan:
-    """What the engine should do for one prompt (all host-side ints).
+    """What the scheduler should do for one prompt (all host-side ints).
 
     n_restore: tokens covered by the best snapshot (0 = cold start).
     snapshot:  the pytree to restore, or None.
@@ -111,7 +111,7 @@ class PrefillPlan:
     n_trunc:   the prompt's block-aligned truncation, snapshotted after the
                prefill completes (0 = below the admission floor).
 
-    The engine derives the actual prefill cut list itself: the promote
+    The scheduler derives the actual prefill cut list itself: the promote
     boundary, plus the truncation for token-granularity states, each
     segment bucketed by core.state.bucket_chunks to bound retracing.
     """
@@ -166,16 +166,25 @@ class PrefixCache:
                 f"prefix cache bound to block_size={self.block_size}, "
                 f"engine model uses {block_size}")
 
-    def bind_params(self, params):
-        """Tie the store to one parameter set: snapshots are only valid
-        under the weights that produced them."""
+    def bind_params(self, params, state_sig: bytes = b""):
+        """Tie the store to one parameter set (and, via `state_sig`, one
+        snapshot shape signature): snapshots are only valid under the
+        weights that produced them, and some state kinds' snapshots embed
+        engine-dependent shapes — a ring-KV window is min(sliding_window,
+        max_len), so two engines differing only in max_len must not share
+        ring snapshots (the engine passes the signature of its snapshot
+        leaf shapes; max_len-independent kinds compose the same signature
+        for any max_len and keep sharing)."""
         fp = params_fingerprint(params)
+        if state_sig:
+            fp = hashlib.sha256(fp + state_sig).digest()
         if self._params_fp is None:
             self._params_fp = fp
         elif self._params_fp != fp:
             raise ValueError(
                 "prefix cache already holds snapshots for different model "
-                "weights; use one PrefixCache per parameter set")
+                "weights or snapshot shapes; use one PrefixCache per "
+                "(parameter set, snapshot shape) pair")
 
     def bind_codec(self, serialize, deserialize):
         """Snapshot (de)serializers from the engine's DecodeState — the
@@ -197,6 +206,23 @@ class PrefixCache:
                 key + toks[d * blk:(d + 1) * blk].tobytes()).digest()
             keys.append(key)
         return keys
+
+    def chain_keys(self, tokens, n_blocks: int) -> list[bytes]:
+        """Read-only chain keys for the first n_blocks prompt blocks (no
+        stats, no seen-marking, no IO) — the scheduler uses these to match
+        a prompt against snapshot boundaries other in-flight prefills have
+        announced, before committing to a real plan()."""
+        assert self.block_size, "bind_block_size() first"
+        return self._chain(tokens, n_blocks)
+
+    def resident_depth(self, keys) -> int:
+        """Deepest in-memory entry along `keys` (read-only: no hit
+        accounting, no disk probes)."""
+        best = 0
+        for d, key in enumerate(keys, start=1):
+            if key in self._entries:
+                best = d
+        return best
 
     # -- disk tier ---------------------------------------------------------
 
@@ -328,9 +354,14 @@ class PrefixCache:
             self.hit_tokens += entry.n_tokens
         else:
             self.misses += 1
-        if seen_d > hit_d and seen_d >= min_blocks:
+        if seen_d > hit_d and seen_d >= min_blocks and seen_d != admit_d:
             # a previous prompt shared this boundary but no snapshot exists
-            # there yet: split the prefill and allocate on reuse
+            # there yet: split the prefill and allocate on reuse. A seen
+            # boundary AT the truncation is excluded — the truncation
+            # snapshot covers that position already, so a promote there
+            # would be a redundant split (every prompt marks its own chain
+            # seen, so a replanned request would otherwise "promote" its
+            # own truncation forever)
             plan.n_promote = seen_d * blk
             plan.promote_key = keys[seen_d - 1]
 

@@ -84,14 +84,6 @@ def device_scalars(sp: SamplingParams):
             jnp.asarray(sp.is_greedy, jnp.bool_))
 
 
-def set_slot_sampling(ss: SlotSampling, si: int, sp: SamplingParams) -> SlotSampling:
-    t, k, p, g = device_scalars(sp)
-    return SlotSampling(temperature=ss.temperature.at[si].set(t),
-                        top_k=ss.top_k.at[si].set(k),
-                        top_p=ss.top_p.at[si].set(p),
-                        greedy=ss.greedy.at[si].set(g))
-
-
 def init_slot_keys(slots: int) -> jax.Array:
     """(slots, 2) uint32 raw PRNG keys; admission overwrites per request."""
     return jnp.zeros((slots, 2), jnp.uint32)
@@ -168,3 +160,20 @@ def sample_step(key, logits, temperature, top_k, top_p, greedy):
     """
     key, sub = jax.random.split(key)
     return sample_token(sub, logits, temperature, top_k, top_p, greedy), key
+
+
+def sample_first(logits, key, temperature, top_k, top_p, greedy, *,
+                 logprobs: bool = False):
+    """A request's first token, from its prefill last-position logits
+    (1, V) — the first split of the request's PRNG stream happens here.
+    Lives in the chunked admission path: the scheduler's final prefill
+    chunk produces `logits`, and this runs as one more async dispatch on
+    top of it (no host sync). Returns (token (1,), advanced_key,
+    logprob ()) — the logprob is 0 unless `logprobs` (trace-static).
+    """
+    tok, key = sample_step(key, logits[0], temperature, top_k, top_p, greedy)
+    if logprobs:
+        lp = jax.nn.log_softmax(logits[0].astype(jnp.float32))[tok]
+    else:
+        lp = jnp.zeros((), jnp.float32)
+    return tok[None], key, lp

@@ -1,0 +1,301 @@
+"""Chunked, overlapped prefill scheduling for ServeEngine.
+
+The paper's block-based causal algorithm makes prefill a sequence of
+constant-state lt_block_size chunks, which makes admission work naturally
+*preemptible*: nothing about the sketch state cares whether the next chunk
+runs now or three decode ticks from now. This module exploits that — a
+``PrefillScheduler`` keeps a FIFO queue of in-flight prefills
+(``PrefillJob``), each carried between chunks as a first-class
+``core.state.PartialPrefill``, and every engine tick dispatches at most a
+``prefill_budget`` worth of chunk work before the lockstep decode tick
+runs. A long prompt therefore admits incrementally across ticks instead of
+stalling every live request for its whole prefill.
+
+Chunks come from ``core.state.bucket_chunks`` (power-of-two multiples of
+the block size, capped at the budget), so the jitted per-chunk-length
+prefill still compiles a bounded trace set no matter the workload.
+
+Prefix-aware coalescing: with a PrefixCache attached, every snapshot a job
+*plans* to insert (promote split, truncation) is announced in a pending-key
+map before it materializes. A later request whose chain crosses an
+announced boundary deeper than its own best snapshot does not re-plan a
+promote split of its own — it parks until the producer's snapshot lands,
+then replans and restores from it. Under N concurrent misses on a shared
+prefix, the promote split therefore happens exactly once, and every
+follower resumes from the deepest snapshot materialized by the same batch
+instead of re-prefilling the shared prefix N times.
+
+Non-resumable decode states (full/poly KV) cannot be chunked; their jobs
+are a single native-length prefill dispatch — still asynchronous, but not
+preemptible by the budget.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import PartialPrefill, bucket_chunks
+
+
+@dataclass
+class PrefillJob:
+    """One request's in-flight admission prefill."""
+    req: Any                      # serve.engine.Request (duck-typed)
+    slot: int                     # reserved engine slot
+    prompt_np: Any = None         # host copy; chunks slice this (free) and
+                                  # ship one h2d transfer per dispatch
+    part: PartialPrefill | None = None
+    cuts: deque = field(default_factory=deque)   # absolute cut points
+    whole: bool = False           # non-resumable: one native-length dispatch
+    snap_at: dict = field(default_factory=dict)  # cut pos -> chain key
+    final_key: bytes = b""        # insert at completion (block granularity)
+    final_pos: int = 0
+    wait_key: bytes | None = None  # parked on another job's pending snapshot
+    announced: list = field(default_factory=list)
+
+    @property
+    def waiting(self) -> bool:
+        return self.wait_key is not None
+
+
+class PrefillScheduler:
+    """Budgeted, prefix-aware chunk dispatcher over the engine's jitted
+    prefill functions (all callables close over the engine's params):
+
+      prefill_fn(tokens)             -> (logits, state)   native length
+      resume_fn(tokens, state, pos0) -> (logits, state)   one chunk
+      fresh_fn()                     -> state             zero tokens
+      restore_fn(snapshot, n)        -> state             snapshot restore
+
+    ``budget`` is in prompt tokens per tick (None = unlimited); a tick may
+    overshoot by at most one chunk (chunks are capped near the budget via
+    bucket_chunks' max_blocks) and always dispatches at least one chunk
+    when any job is runnable, so prefills make progress under any budget.
+    """
+
+    def __init__(self, state, *, prefill_fn: Callable, resume_fn: Callable,
+                 fresh_fn: Callable, restore_fn: Callable,
+                 prefix_cache=None, min_snapshot_blocks: int = 1,
+                 budget: int | None = None, resume_lens: set | None = None):
+        if budget is not None and budget < 1:
+            raise ValueError("prefill_budget must be >= 1 (or None)")
+        self.state = state
+        self.prefill_fn = prefill_fn
+        self.resume_fn = resume_fn
+        self.fresh_fn = fresh_fn
+        self.restore_fn = restore_fn
+        self.pc = prefix_cache
+        self.min_blocks = min_snapshot_blocks
+        self.budget = budget
+        self.resume_lens = resume_lens if resume_lens is not None else set()
+        self.jobs: list[PrefillJob] = []
+        # announced-but-unmaterialized snapshot boundaries of in-flight
+        # jobs: chain key -> token position (the coalescing rendezvous)
+        self.pending: dict[bytes, int] = {}
+        self.started = self.completed = 0
+        self.chunks = self.chunk_tokens = 0
+        self.coalesced = self.promotes = 0
+
+    # ------------------------------------------------------------------
+
+    @property
+    def active(self) -> bool:
+        return bool(self.jobs)
+
+    @property
+    def max_chunk_blocks(self) -> int | None:
+        if self.budget is None:
+            return None
+        return max(1, self.budget // self.state.block_size)
+
+    def start(self, req, slot: int) -> PrefillJob:
+        """Enqueue one request's prefill into a reserved slot."""
+        job = PrefillJob(req=req, slot=slot,
+                         prompt_np=np.asarray(req.prompt))
+        self.started += 1
+        self._plan(job)
+        self.jobs.append(job)
+        return job
+
+    def tick(self) -> list[PrefillJob]:
+        """Dispatch up to one budget of chunk work (FIFO over jobs; parked
+        jobs are skipped, so followers never starve the batch). Returns
+        jobs whose prefill completed this tick — the engine installs them
+        into their slots."""
+        budget = float("inf") if self.budget is None else self.budget
+        spent = 0
+        done = []
+        for job in list(self.jobs):
+            if spent >= budget:
+                break
+            if job.waiting:
+                if job.wait_key in self.pending:
+                    continue                   # producer still in flight
+                job.wait_key = None
+                self._plan(job)                # snapshot landed: replan
+                if job.waiting:
+                    continue
+            while job.cuts and spent < budget:
+                spent += self._dispatch(job)
+            if not job.cuts:
+                self._finish(job)
+                done.append(job)
+        return done
+
+    def drop(self, job: PrefillJob):
+        """Evict an in-flight prefill (its PartialPrefill carry is simply
+        released; announced boundaries are withdrawn so parked followers
+        replan instead of waiting forever)."""
+        self._withdraw(job)
+        self.jobs.remove(job)
+
+    def stats(self) -> dict:
+        return {
+            "started": self.started,
+            "completed": self.completed,
+            "inflight": len(self.jobs),
+            "waiting": sum(j.waiting for j in self.jobs),
+            "chunks": self.chunks,
+            "chunk_tokens": self.chunk_tokens,
+            "coalesced": self.coalesced,
+            "promote_splits": self.promotes,
+        }
+
+    def reset_stats(self):
+        self.started = self.completed = 0
+        self.chunks = self.chunk_tokens = 0
+        self.coalesced = self.promotes = 0
+
+    # ------------------------------------------------------------------
+
+    def _announce(self, job: PrefillJob, key: bytes, pos: int):
+        if key and key not in self.pending:
+            self.pending[key] = pos
+            job.announced.append(key)
+
+    def _withdraw(self, job: PrefillJob):
+        for k in job.announced:
+            self.pending.pop(k, None)
+        job.announced = []
+
+    def _materialized(self, job: PrefillJob, key: bytes):
+        """The snapshot at `key` now exists in the cache: clear the pending
+        announcement no matter which job announced it (two jobs can plan an
+        insert at the same boundary and the non-announcer may land first),
+        so parked followers unpark on the next tick."""
+        self.pending.pop(key, None)
+        if key in job.announced:
+            job.announced.remove(key)
+
+    def _plan(self, job: PrefillJob):
+        """Decide the job's cut list / restore point, or park it on an
+        in-flight snapshot boundary announced by an earlier job."""
+        req = job.req
+        plen = int(req.prompt.shape[0])
+        blk = self.state.block_size
+        if not self.state.resumable:
+            job.whole = True
+            job.cuts = deque([plen])
+            return
+        if self.pc is None:
+            job.part = PartialPrefill(self.fresh_fn(), 0)
+            job.cuts = deque(bucket_chunks(0, plen, blk,
+                                           self.max_chunk_blocks))
+            return
+
+        # coalesce BEFORE planning: the deepest boundary an in-flight job
+        # has announced that is deeper than our best resident snapshot
+        # (and still leaves >= 1 token to prefill) is worth parking for —
+        # restoring from it costs O(1) while prefilling up to it costs
+        # O(boundary). The park check is read-only (chain_keys /
+        # resident_depth mutate no cache state), so a parked job records
+        # exactly ONE plan() — at unpark — and never inflates lookup/hit
+        # stats or a snapshot's eviction hit-weight with a restore it
+        # discards.
+        usable_d = (plen - 1) // blk
+        keys = self.pc.chain_keys(job.prompt_np, usable_d)
+        best_key, best_pos = None, self.pc.resident_depth(keys) * blk
+        for d in range(1, usable_d + 1):
+            pos = self.pending.get(keys[d - 1])
+            if pos == d * blk and pos > best_pos:
+                best_key, best_pos = keys[d - 1], pos
+        if best_key is not None:
+            job.wait_key = best_key
+            self.coalesced += 1
+            return
+
+        plan = self.pc.plan(job.prompt_np, min_blocks=self.min_blocks)
+        snap_at = {}
+        if plan.n_promote:
+            snap_at[plan.n_promote] = plan.promote_key
+            self.promotes += 1
+        want_trunc = (bool(plan.trunc_key)
+                      and plan.n_trunc > plan.n_restore
+                      and plan.n_trunc != plan.n_promote)
+        split_trunc = (want_trunc and plan.n_trunc < plen
+                       and self.state.snapshot_granularity == "token")
+        if split_trunc:
+            snap_at[plan.n_trunc] = plan.trunc_key
+        job.snap_at = snap_at
+        if want_trunc and not split_trunc:
+            # block granularity (the final state's prefix matrix covers
+            # exactly the truncation; the tail sits in the buffers), or a
+            # block-aligned prompt whose final state IS the truncation
+            job.final_key, job.final_pos = plan.trunc_key, plan.n_trunc
+        for pos, key in snap_at.items():
+            self._announce(job, key, pos)
+        if job.final_key:
+            self._announce(job, job.final_key, job.final_pos)
+
+        if plan.n_restore:
+            job.part = PartialPrefill(
+                self.restore_fn(plan.snapshot, plan.n_restore),
+                plan.n_restore)
+        else:
+            job.part = PartialPrefill(self.fresh_fn(), 0)
+        cuts, pos = [], plan.n_restore
+        for cut in sorted(set(snap_at) | {plen}):
+            if cut > pos:
+                cuts.extend(bucket_chunks(pos, cut, blk,
+                                          self.max_chunk_blocks))
+                pos = cut
+        job.cuts = deque(cuts)
+
+    def _dispatch(self, job: PrefillJob) -> int:
+        """Dispatch the job's next chunk (asynchronously — no host sync
+        here; the engine syncs on sampled tokens only). Returns the chunk's
+        token count for budget accounting."""
+        cut = job.cuts.popleft()
+        if job.whole:
+            logits, state = self.prefill_fn(job.req.prompt[None])
+            job.part = PartialPrefill(state, cut, logits)
+            self.chunks += 1
+            self.chunk_tokens += cut
+            return cut
+        pos = job.part.n_tokens
+        # host-side slice (free) + one h2d transfer beats two eager device
+        # ops per chunk on the admission hot path
+        chunk = jnp.asarray(job.prompt_np[None, pos:cut], jnp.int32)
+        self.resume_lens.add(cut - pos)
+        logits, state = self.resume_fn(chunk, job.part.state, pos)
+        job.part = PartialPrefill(state, cut, logits)
+        self.chunks += 1
+        self.chunk_tokens += cut - pos
+        key = job.snap_at.get(cut)
+        if key:
+            self.pc.insert(key, cut, self.state.snapshot(state))
+            self._materialized(job, key)
+        return cut - pos
+
+    def _finish(self, job: PrefillJob):
+        if job.final_key and self.pc is not None:
+            self.pc.insert(job.final_key, job.final_pos,
+                           self.state.snapshot(job.part.state))
+            self._materialized(job, job.final_key)
+        self._withdraw(job)
+        self.jobs.remove(job)
+        self.completed += 1

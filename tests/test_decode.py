@@ -12,7 +12,8 @@ from repro.core import (block_causal_linear_attention, init_polysketch_cache,
                         polysketch_prefill, qk_layernorm,
                         sketch_param_count)
 from repro.core.decode import (broadcast_slot_caches, init_kv_cache,
-                               kv_ring_decode_step, slot_gather,
+                               init_ring_cache, kv_ring_decode_step,
+                               kv_ring_prefill, ring_grid, slot_gather,
                                slot_scatter)
 from repro.core.sketches import sketch_half
 from repro.utils import param_count
@@ -127,6 +128,63 @@ def test_kv_ring_wraparound_matches_windowed_reference():
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    atol=1e-5, err_msg=f"step {t}")
     assert int(cache.pos) == steps
+
+
+@pytest.mark.parametrize("hq,hkv", [(2, 2), (4, 2)])
+def test_kv_ring_prefill_matches_decode_loop(hq, hkv):
+    """The fixed-lattice ring prefill agrees with the token-by-token ring
+    decode (same sliding window, same ring layout), including GQA and
+    prompts that wrap the ring several times."""
+    W, S, h = 8, 21, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, hq, S, h))
+    k = jax.random.normal(ks[1], (1, hkv, S, h))
+    v = jax.random.normal(ks[2], (1, hkv, S, h))
+    cache = init_ring_cache(1, hkv, h, W)
+    refs = []
+    for t in range(S):
+        out, cache = kv_ring_decode_step(cache, q[:, :, t], k[:, :, t],
+                                         v[:, :, t])
+        refs.append(out)
+    ref = jnp.stack(refs, axis=2)
+    grid = ring_grid(BLK, W)
+    out, rc = kv_ring_prefill(init_ring_cache(1, hkv, h, W), q, k, v,
+                              grid=grid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    assert int(rc.pos) == S
+    np.testing.assert_allclose(np.asarray(rc.k), np.asarray(cache.k),
+                               atol=1e-6)
+
+
+def test_kv_ring_prefill_resume_bit_exact():
+    """Resuming the ring prefill at any lattice-aligned cut is BIT-equal to
+    the cold prefill of the full segment — outputs, ring contents, pos
+    (the snapshot/resume contract kv_ring's token granularity rests on)."""
+    W, S, hq, hkv, h = 8, 37, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (1, hq, S, h))
+    k = jax.random.normal(ks[1], (1, hkv, S, h))
+    v = jax.random.normal(ks[2], (1, hkv, S, h))
+    grid = ring_grid(BLK, W)
+    out_cold, cold = kv_ring_prefill(init_ring_cache(1, hkv, h, W), q, k, v,
+                                     grid=grid)
+    for cut in (grid, 2 * grid, 4 * grid):
+        _, c1 = kv_ring_prefill(init_ring_cache(1, hkv, h, W),
+                                q[:, :, :cut], k[:, :, :cut], v[:, :, :cut],
+                                grid=grid)
+        out_res, c2 = kv_ring_prefill(c1, q[:, :, cut:], k[:, :, cut:],
+                                      v[:, :, cut:], grid=grid)
+        assert bool(jnp.array_equal(out_res, out_cold[:, :, cut:])), cut
+        for a, b in zip(c2, cold):
+            assert bool(jnp.array_equal(a, b)), cut
+
+
+def test_ring_grid_divides_block_and_fits_window():
+    assert ring_grid(16, 32) == 16     # block fits: lattice == block
+    assert ring_grid(16, 8) == 8       # largest divisor of 16 <= 8
+    assert ring_grid(48, 32) == 24
+    assert ring_grid(16, 5) == 4
+    assert ring_grid(7, 2) == 1        # degenerate: token lattice
 
 
 def test_fold_at_block_edge_updates_prefix_state():

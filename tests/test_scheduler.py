@@ -1,0 +1,305 @@
+"""Chunked/overlapped prefill scheduler invariants.
+
+The contracts locked here:
+  - chunk-overlapped admission is BIT-identical to the lockstep engine and
+    to cold `generate()` for every resumable family (polysketch / SSD /
+    RG-LRU+ring hybrid), including admissions resumed from prefix-cache
+    snapshots materialized mid-batch;
+  - emitted tokens are invariant to `prefill_budget` (1 block vs
+    unlimited) and to `overlap` on/off;
+  - N concurrent misses on a shared prefix coalesce: the promote split
+    happens exactly once and followers restore from the snapshot the same
+    batch materialized instead of re-prefilling the shared prefix;
+  - a half-prefilled slot's carry (core.state.PartialPrefill) is a
+    first-class state: snapshotable at its pause point, evictable, and
+    restorable to finish bit-identically to a cold prefill.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.state import bucket_chunks
+from repro.models import build_model
+from repro.serve import (PrefixCache, SamplingParams, ServeEngine, generate)
+
+FAMILIES = {
+    "polysketch": ("gpt2s-polysketch", {}),
+    "ssd": ("mamba2-780m", dict(lt_block_size=16)),
+    "hybrid": ("recurrentgemma-9b", dict(lt_block_size=16)),
+}
+
+
+def _setup(family):
+    arch, overrides = FAMILIES[family]
+    cfg = get_config(arch, smoke=True).replace(**overrides)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(sum(map(ord, family))))
+    return model, cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.integers(0, cfg.vocab_size, n), jnp.int32)
+            for n in lens]
+
+
+def _refs(model, cfg, params, prompts, steps):
+    return [np.asarray(generate(model, cfg, params, p[None], steps).tokens[0])
+            for p in prompts]
+
+
+@pytest.mark.parametrize("family", list(FAMILIES))
+def test_overlap_chunked_admission_matches_generate(family):
+    """Overlapped, budget-limited chunked admission bit-matches cold
+    generate() for every resumable family — admissions staggered so
+    prefill chunks interleave live decode ticks."""
+    model, cfg, params = _setup(family)
+    blk = cfg.lt_block_size
+    lens = [2 * blk + 5, 3, 4 * blk, blk + 9]
+    prompts = _prompts(cfg, lens, seed=3)
+    refs = _refs(model, cfg, params, prompts, 6)
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=8 * blk + 32,
+                      overlap=True, prefill_budget=blk)
+    # stagger: two up front, the rest submitted mid-decode
+    eng.submit(prompts[0], 6)
+    eng.submit(prompts[1], 6)
+    outs = {}
+    for _ in range(3):
+        for o in eng.step():
+            outs[o.rid] = o
+    eng.submit(prompts[2], 6)
+    eng.submit(prompts[3], 6)
+    for o in eng.run():
+        outs[o.rid] = o
+    assert not eng.busy and eng.n_active == 0
+    for rid, ref in enumerate(refs):
+        np.testing.assert_array_equal(outs[rid].tokens, ref, err_msg=family)
+
+
+@pytest.mark.parametrize("family", ["polysketch", "hybrid"])
+def test_prefix_resume_mid_batch_matches_generate(family):
+    """Admissions that restore from snapshots materialized by the SAME
+    in-flight batch (shared prefix, concurrent misses) still bit-match
+    cold generate() under overlap + tight budget."""
+    model, cfg, params = _setup(family)
+    blk = cfg.lt_block_size
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, 3 * blk)
+    prompts = [jnp.asarray(np.concatenate(
+        [shared, rng.integers(0, cfg.vocab_size, blk + 2 + i)]), jnp.int32)
+        for i in range(4)]
+    refs = _refs(model, cfg, params, prompts, 5)
+    eng = ServeEngine(model, cfg, params, slots=4, max_len=8 * blk + 32,
+                      prefix_cache=PrefixCache(8 << 20),
+                      overlap=True, prefill_budget=blk)
+    for p in prompts:
+        eng.submit(p, 5)
+    outs = {o.rid: o for o in eng.run()}
+    for rid, ref in enumerate(refs):
+        np.testing.assert_array_equal(outs[rid].tokens, ref, err_msg=family)
+    st = eng.stats()
+    assert st["prefix_cache"]["hits"] >= 1
+    assert st["scheduler"]["coalesced"] >= 1
+
+
+def test_decode_output_invariant_to_budget_and_overlap():
+    """Tokens depend only on (seed, prompt, SamplingParams) — never on the
+    prefill budget or the overlap pipeline."""
+    model, cfg, params = _setup("polysketch")
+    blk = cfg.lt_block_size
+    prompts = _prompts(cfg, [5, 2 * blk + 7, 4 * blk], seed=11)
+    sp = SamplingParams(temperature=0.7, top_k=20, seed=9)
+    sps = [None, sp, None]
+    want = None
+    for overlap in (False, True):
+        for budget in (blk, None):
+            eng = ServeEngine(model, cfg, params, slots=3,
+                              max_len=8 * blk + 16, overlap=overlap,
+                              prefill_budget=budget)
+            for p, s in zip(prompts, sps):
+                eng.submit(p, 7, sampling=s)
+            outs = {o.rid: o for o in eng.run()}
+            got = [outs[i].tokens for i in range(len(prompts))]
+            if want is None:
+                want = got
+            else:
+                for w, g in zip(want, got):
+                    np.testing.assert_array_equal(w, g,
+                                                  err_msg=f"{overlap}/{budget}")
+
+
+def test_shared_prefix_coalescing_promotes_exactly_once():
+    """N concurrent misses on a shared prefix whose divergent suffixes
+    cross a block boundary: exactly ONE promote split; every other miss
+    parks on the announced boundary and restores from the snapshot once
+    it lands. The shared prefix is prefilled ~twice (cold + up-to-promote)
+    instead of N times."""
+    model, cfg, params = _setup("polysketch")
+    blk = cfg.lt_block_size
+    rng = np.random.default_rng(1)
+    shared = rng.integers(0, cfg.vocab_size, 4 * blk)
+    prompts = [jnp.asarray(np.concatenate(
+        [shared, rng.integers(0, cfg.vocab_size, blk + 3 + i)]), jnp.int32)
+        for i in range(5)]
+    refs = _refs(model, cfg, params, prompts, 5)
+    eng = ServeEngine(model, cfg, params, slots=5, max_len=8 * blk,
+                      prefix_cache=PrefixCache(8 << 20),
+                      overlap=True, prefill_budget=blk)
+    for p in prompts:
+        eng.submit(p, 5)
+    outs = {o.rid: o for o in eng.run()}
+    for rid, ref in enumerate(refs):
+        np.testing.assert_array_equal(outs[rid].tokens, ref)
+    sch = eng.stats()["scheduler"]
+    assert sch["promote_splits"] == 1, sch
+    assert sch["coalesced"] >= 3, sch
+    # naive admission would prefill the 64-token shared prefix 5x; the
+    # coalesced stream pays it twice (cold + promote split), plus suffixes
+    naive = sum(int(p.shape[0]) for p in prompts)
+    assert sch["chunk_tokens"] <= naive - 2 * 4 * blk, sch
+
+
+def test_shared_full_boundary_coalesces_on_truncation():
+    """When the shared boundary IS each prompt's truncation (sub-block
+    suffixes), followers coalesce on the first request's announced
+    truncation snapshot — no promote split at all."""
+    model, cfg, params = _setup("polysketch")
+    blk = cfg.lt_block_size
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab_size, 4 * blk)
+    prompts = [jnp.asarray(np.concatenate(
+        [shared, rng.integers(0, cfg.vocab_size, 3 + i)]), jnp.int32)
+        for i in range(4)]
+    refs = _refs(model, cfg, params, prompts, 4)
+    eng = ServeEngine(model, cfg, params, slots=4, max_len=8 * blk,
+                      prefix_cache=PrefixCache(8 << 20),
+                      overlap=True, prefill_budget=blk)
+    for p in prompts:
+        eng.submit(p, 4)
+    outs = {o.rid: o for o in eng.run()}
+    for rid, ref in enumerate(refs):
+        np.testing.assert_array_equal(outs[rid].tokens, ref)
+    sch = eng.stats()["scheduler"]
+    assert sch["promote_splits"] == 0, sch
+    assert sch["coalesced"] >= 3, sch
+    assert eng.stats()["prefix_cache"]["hits"] >= 3
+
+
+@pytest.mark.parametrize("family", ["polysketch", "ssd", "hybrid"])
+def test_partial_prefill_snapshot_evict_restore(family):
+    """A half-prefilled slot's carry is first-class: pause a chunked
+    prefill at a block cut, snapshot it, THROW THE CARRY AWAY, restore
+    from the snapshot, finish — logits and final state bit-match the cold
+    full prefill."""
+    model, cfg, params = _setup(family)
+    st = model.state
+    blk = cfg.lt_block_size
+    prompt = _prompts(cfg, [3 * blk + 5], seed=13)[0][None]
+    max_len = 6 * blk
+    logits_cold, state_cold = st.prefill(params, prompt,
+                                         st.init_slot(params, max_len))
+
+    part = st.begin_partial(params, max_len)
+    assert not part.started
+    cuts = bucket_chunks(0, int(prompt.shape[1]), blk, max_blocks=1)
+    pause = 2  # pause after two chunks (block-aligned by construction)
+    for cut in cuts[:pause]:
+        part = st.advance_partial(params, prompt[:, part.n_tokens:cut], part)
+    snap, n = st.partial_snapshot(part)
+    assert n == part.n_tokens and n % blk == 0
+    del part                                   # evict the in-flight carry
+    part = st.partial_restore(params, snap, n, max_len)
+    for cut in cuts[pause:]:
+        part = st.advance_partial(params, prompt[:, part.n_tokens:cut], part)
+    assert bool(jnp.array_equal(part.logits, logits_cold)), family
+    la, lb = map(jax.tree_util.tree_leaves, (part.state, state_cold))
+    assert all(bool(jnp.array_equal(a, b)) for a, b in zip(la, lb)), family
+
+
+def test_partial_snapshot_rejects_off_grid_pause():
+    model, cfg, params = _setup("polysketch")
+    st = model.state
+    prompt = _prompts(cfg, [cfg.lt_block_size + 3], seed=5)[0][None]
+    part = st.begin_partial(params, 64)
+    part = st.advance_partial(params, prompt, part)   # off-grid n_tokens
+    with pytest.raises(ValueError, match="off-grid"):
+        st.partial_snapshot(part)
+
+
+def test_overlap_eos_and_single_token_budget():
+    """EOS retirement lags one tick under overlap (the speculative decode
+    past EOS is dropped at sync) and max_new_tokens=1 requests never leak
+    a decode token — both bit-match the lockstep engine."""
+    model, cfg, params = _setup("polysketch")
+    prompts = _prompts(cfg, [33, 17], seed=17)
+    refs = _refs(model, cfg, params, prompts, 8)
+    eos = int(refs[0][2])
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=128,
+                      overlap=True, prefill_budget=16)
+    eng.submit(prompts[0], 8, eos_id=eos)
+    eng.submit(prompts[1], 1)
+    outs = {o.rid: o for o in eng.run()}
+    assert outs[0].finish_reason == "eos"
+    np.testing.assert_array_equal(outs[0].tokens, refs[0][:3])
+    assert outs[1].finish_reason == "length"
+    np.testing.assert_array_equal(outs[1].tokens, refs[1][:1])
+
+
+def test_bucket_chunks_max_blocks_cap():
+    """The budget cap splits long spans into equal power-of-two chunks
+    without changing the bounded chunk-length set."""
+    assert bucket_chunks(0, 2048, 16, max_blocks=4) == list(range(64, 2049, 64))
+    assert bucket_chunks(0, 2048, 16) == [2048]
+    # cap rounds down to a power of two; tail unaffected
+    assert bucket_chunks(0, 7 * 16 + 3, 16, max_blocks=3) == [
+        32, 64, 96, 112, 115]
+    assert bucket_chunks(16, 96, 16, max_blocks=1) == [32, 48, 64, 80, 96]
+    # cap larger than the span is a no-op
+    assert bucket_chunks(0, 96, 16, max_blocks=64) == [64, 96]
+
+
+def test_ring_snapshots_not_shared_across_max_len():
+    """kv_ring snapshots embed the engine's ring window
+    (min(sliding_window, max_len)), so a PrefixCache bound by an engine
+    with one max_len must loudly reject an engine whose window differs —
+    restoring the wrong-shaped ring would crash mid-admission. Engines
+    whose snapshot shapes agree still share."""
+    model, cfg, params = _setup("hybrid")
+    pc = PrefixCache(1 << 20)
+    # smoke sliding_window=32: max_len 24 vs 64 give different ring widths
+    ServeEngine(model, cfg, params, max_len=24, prefix_cache=pc)
+    with pytest.raises(ValueError, match="snapshot shape"):
+        ServeEngine(model, cfg, params, max_len=64, prefix_cache=pc)
+    # same shapes -> same fingerprint -> sharing is fine (and polysketch
+    # snapshots are max_len-independent entirely)
+    ServeEngine(model, cfg, params, max_len=24, prefix_cache=pc)
+    modelp, cfgp, paramsp = _setup("polysketch")
+    pcp = PrefixCache(1 << 20)
+    ServeEngine(modelp, cfgp, paramsp, max_len=32, prefix_cache=pcp)
+    ServeEngine(modelp, cfgp, paramsp, max_len=96, prefix_cache=pcp)
+
+
+def test_stats_shapes_and_scheduler_counters():
+    """New observability fields: ITL percentiles, TTFT histogram, tick-gap
+    stats, scheduler counters — present and self-consistent."""
+    model, cfg, params = _setup("polysketch")
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=96, overlap=True,
+                      prefill_budget=16)
+    for p in _prompts(cfg, [20, 40], seed=21):
+        eng.submit(p, 6)
+    eng.run()
+    st = eng.stats()
+    assert set(st["itl_ms"]) == {"p50", "p95", "p99"}
+    assert st["itl_ms"]["p50"] > 0
+    hist = st["ttft_hist"]
+    assert len(hist["counts"]) == len(hist["edges_ms"])
+    assert sum(hist["counts"]) == st["requests"] == 2
+    assert st["tick_gap_ms"]["max"] >= st["tick_gap_ms"]["median"] > 0
+    sch = st["scheduler"]
+    assert sch["started"] == sch["completed"] == 2
+    assert sch["inflight"] == 0 and sch["chunks"] >= 4
+    eng.reset_stats()
+    st2 = eng.stats()
+    assert st2["scheduler"]["started"] == 0 and st2["itl_ms"]["p50"] == 0.0

@@ -27,7 +27,7 @@ KIND_SETUPS = {
     "poly_kv": ("gpt2s-polysketch", dict(attention="polynomial"), None, False),
     "kv_ring": ("gpt2s-polysketch",
                 dict(block_pattern=("local_attn",), sliding_window=8),
-                None, False),
+                "token", True),
     "ssd": ("mamba2-780m", dict(lt_block_size=BLK), "token", True),
     "rglru": ("recurrentgemma-9b",
               dict(block_pattern=("rglru",), lt_block_size=BLK),
@@ -175,16 +175,19 @@ def test_unsupported_snapshot_raises(kind):
 
 def test_composite_granularity_weakest_member():
     """A model mixing kinds gets the weakest member's capability: the
-    recurrentgemma hybrid (rglru + ring-KV local attention) cannot
-    snapshot; a pure-block mix stays block; any token member forces
-    token (split-at-boundary) behavior."""
+    recurrentgemma hybrid (rglru + ring-KV local attention) snapshots at
+    token granularity since the ring gained O(W) snapshots; a pure-block
+    mix stays block; any token member forces token (split-at-boundary)
+    behavior; a full-KV member disables snapshots."""
     hybrid = get_config("recurrentgemma-9b", smoke=True)
     assert state_kinds(hybrid) == ("rglru", "kv_ring")
-    assert composite_granularity(state_kinds(hybrid)) is None
-    assert build_model(hybrid).state.snapshot_granularity is None
+    assert composite_granularity(state_kinds(hybrid)) == "token"
+    st = build_model(hybrid).state
+    assert st.snapshot_granularity == "token" and st.resumable
     assert composite_granularity(("polysketch",)) == "block"
     assert composite_granularity(("polysketch", "ssd")) == "token"
     assert composite_granularity(("ssd", "rglru")) == "token"
+    assert composite_granularity(("rglru", "kv_full")) is None
 
 
 def test_mixer_state_kind_mapping():
