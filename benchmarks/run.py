@@ -19,7 +19,8 @@ MODULES = [
     "sketch_error",        # Theorem 1.1
     "kernel_bench",        # S3.1 lt-mult + linear-vs-quadratic attention
     "latency_vs_context",  # Figure 1 / Table 4
-    "serve_throughput",    # continuous batching; decode cost flat in ctx
+    "serve_throughput",    # continuous batching; decode cost flat in ctx;
+                           # tick-vs-roofline gap + telemetry overhead A/B
                            # + sampled-vs-greedy tick cost (serve/decode_*,
                            #   serve/sampling_overhead -> BENCH_serve.json)
     "prefix_cache",        # shared-prompt TTFT: snapshot cache off/cold/warm

@@ -1,12 +1,64 @@
-"""Render the roofline table (EXPERIMENTS.md Section Roofline) from
-experiments/dryrun.json.
+"""Roofline analysis: static tables from experiments/dryrun.json, plus the
+serve-tick roofline used by the telemetry-driven benchmark cell.
 
   PYTHONPATH=src python -m repro.launch.roofline --in experiments/dryrun.json
+  PYTHONPATH=src python -m repro.launch.roofline --serve-json BENCH_serve.json
+
+The serve side (tick_roofline / measured_tick_s) gives ROADMAP item 2 its
+tracked number: benchmarks/serve_throughput.py drives a real engine with
+telemetry attached, reads the median decode-tick gap from the metrics
+registry, lowers the engine's jitted tick for its flop/byte counts, and
+compares against the analytic bound for the reference accelerator below —
+the `serve/tick_vs_roofline` cell in BENCH_serve.json is the gap fused
+decode kernels have to close.
+
+NB: deliberately does NOT import launch.dryrun — that module forces a
+512-device host platform via XLA_FLAGS at import time, which would poison
+any process that also runs real engine code. The hardware constants are
+duplicated here instead.
 """
 from __future__ import annotations
 
 import argparse
 import json
+
+# TPU v5e reference part (same model as launch/dryrun.py, not imported —
+# see module docstring): peak dense bf16 FLOP/s and HBM bandwidth B/s
+TPU_V5E_PEAK_FLOPS = 197e12
+TPU_V5E_HBM_BW = 819e9
+
+
+def tick_roofline(flops: float, bytes_accessed: float, *,
+                  peak_flops: float = TPU_V5E_PEAK_FLOPS,
+                  hbm_bw: float = TPU_V5E_HBM_BW) -> dict:
+    """Analytic lower bound on one decode tick's latency.
+
+    `flops` / `bytes_accessed` come from the compiled tick's cost
+    analysis; the bound is the slower of the compute and memory terms
+    (no collective term: the serve tick is single-device). Decode ticks
+    are overwhelmingly memory-bound — every weight is read once per
+    handful of batched tokens — so `bottleneck` is almost always
+    "memory" and the interesting number is how far the measured tick
+    sits above `bound_s`.
+    """
+    compute_s = flops / peak_flops
+    memory_s = bytes_accessed / hbm_bw
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "bound_s": max(compute_s, memory_s),
+        "bottleneck": "compute" if compute_s >= memory_s else "memory",
+    }
+
+
+def measured_tick_s(registry) -> float:
+    """Median host-observed decode-tick interval from a serve telemetry
+    MetricsRegistry (the `serve_tick_gap_ms` histogram), in seconds.
+    Returns 0.0 when the engine recorded no gaps."""
+    hist = registry.get("serve_tick_gap_ms")
+    if hist is None or not hist.count:
+        return 0.0
+    return hist.percentiles((50,))["p50"] * 1e-3
 
 
 def fmt_seconds(x):
@@ -69,11 +121,29 @@ def render_advice(results: dict) -> str:
     return "\n".join(lines)
 
 
+def render_serve(cells: dict) -> str:
+    """One-line summary of the serve-tick roofline cell persisted by
+    benchmarks/run.py (serve/tick_vs_roofline in BENCH_serve.json)."""
+    cell = cells.get("serve/tick_vs_roofline")
+    if not cell:
+        return ("serve/tick_vs_roofline: not measured yet "
+                "(run benchmarks/run.py)")
+    return f"serve/tick_vs_roofline: {cell.get('derived', '')}"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--in", dest="inp", default="experiments/dryrun.json")
     ap.add_argument("--advice", action="store_true")
+    ap.add_argument("--serve-json", default=None,
+                    help="print the measured-vs-roofline serve decode-tick "
+                         "gap from a BENCH_serve.json instead of the "
+                         "dryrun table")
     args = ap.parse_args()
+    if args.serve_json:
+        with open(args.serve_json) as f:
+            print(render_serve(json.load(f).get("cells", {})))
+        return
     with open(args.inp) as f:
         results = json.load(f)
     print(render(results))

@@ -25,10 +25,24 @@ decode tick-gap tail blows out):
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2s-polysketch \
       --smoke --requests 8 --prompt-len 512 --gen 32 --rate 4 \
       --overlap --prefill-budget 64 --max-tick-gap-ratio 4
+
+Observability (serve/telemetry.py): --trace-out writes a schema-validated
+Chrome/Perfetto trace of the run (tick phase spans + per-slot request
+timelines), --metrics-out writes the Prometheus text exposition of the
+engine's metrics registry, --log-events streams every event as recorded.
+--warm compiles all traces up front and arms the retrace watchdog;
+--expect-no-retraces then turns any mid-serve recompile into a nonzero
+exit (the CI gate):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2s-polysketch \
+      --smoke --requests 8 --overlap --prefill-budget 64 --warm \
+      --trace-out /tmp/serve-trace.json --metrics-out /tmp/serve.prom \
+      --expect-no-retraces
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -36,7 +50,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import PrefixCache, SamplingParams, ServeEngine, generate
+from repro.serve import (PrefixCache, SamplingParams, ServeEngine, Telemetry,
+                         format_event, generate, validate_trace)
 
 
 def _percentile(xs, p):
@@ -131,8 +146,32 @@ def main(argv=None):
     ap.add_argument("--logprobs", action="store_true",
                     help="report per-token logprobs of the sampled tokens "
                          "(computed inside the jitted decode tick)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace.json of the run "
+                         "(tick phases + per-slot request timelines; open "
+                         "at ui.perfetto.dev); the trace is schema-"
+                         "validated before writing")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine's metrics registry as "
+                         "Prometheus text exposition to this path")
+    ap.add_argument("--log-events", action="store_true",
+                    help="print every telemetry event as it is recorded "
+                         "(implies tracing; very verbose)")
+    ap.add_argument("--warm", action="store_true",
+                    help="run one warm-up request per prompt-length bucket "
+                         "(plus a few decode ticks) and reset stats before "
+                         "the timed workload: compiles land up front and "
+                         "the retrace watchdog arms")
+    ap.add_argument("--expect-no-retraces", action="store_true",
+                    help="exit nonzero if any jitted entry point "
+                         "recompiled mid-serve (requires --warm so the "
+                         "watchdog has a steady baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.expect_no_retraces and not args.warm:
+        raise SystemExit("--expect-no-retraces requires --warm (without a "
+                         "warm-up pass every compile is expected, so the "
+                         "gate would be vacuous)")
 
     overrides = {"lt_block_size": args.block_size} if args.block_size else {}
     cfg = get_config(args.arch, smoke=args.smoke, **overrides)
@@ -147,13 +186,20 @@ def main(argv=None):
                                   or args.prefix_cache_dir is None):
         raise SystemExit("--expect-disk-hits needs --prefix-cache-mb and "
                          "--prefix-cache-dir")
+    trace_on = bool(args.trace_out or args.log_events)
+    telemetry = Telemetry(
+        trace=trace_on,
+        memory=bool(trace_on or args.metrics_out),
+        on_event=(lambda ev: print(format_event(ev))) if args.log_events
+        else None)
     engine = ServeEngine(model, cfg, params, slots=args.slots,
                          max_len=args.prompt_len + args.gen,
                          prefix_cache=prefix_cache,
                          min_snapshot_blocks=args.min_snapshot_blocks,
                          logprobs=args.logprobs,
                          prefill_budget=args.prefill_budget or None,
-                         overlap=args.overlap)
+                         overlap=args.overlap,
+                         telemetry=telemetry)
     rng = np.random.default_rng(args.seed)
 
     eos = None if args.eos_id < 0 else args.eos_id
@@ -188,6 +234,28 @@ def main(argv=None):
         return SamplingParams(
             temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
             seed=args.seed + rid if args.seed_per_request else args.seed)
+
+    if args.warm:
+        # One request per prompt-length bucket compiles every prefill /
+        # chunk / install / decode trace the workload will need (chunk
+        # splits are deterministic per (length, budget)); the stats reset
+        # afterwards also calls the watchdog's mark_steady(), so any jit
+        # cache growth during the timed run below counts as a mid-serve
+        # retrace. Warm prompts come from an independent stream: the
+        # workload's prompt sequence is identical with and without --warm.
+        wrng = np.random.default_rng(args.seed + 104729)
+        warm_lens = ([args.prompt_len] if args.shared_prefix
+                     else sorted({max(1, args.prompt_len // 2),
+                                  max(1, 3 * args.prompt_len // 4),
+                                  args.prompt_len}))
+        for plen in warm_lens:
+            engine.submit(jax.numpy.asarray(
+                wrng.integers(0, cfg.vocab_size, size=plen),
+                dtype=jax.numpy.int32), min(4, args.gen), None)
+        engine.run()
+        engine.reset_stats()
+        print(f"warm-up: {len(warm_lens)} requests "
+              f"(lengths {warm_lens}), watchdog armed")
 
     t = 0.0
     arrivals = []
@@ -271,6 +339,38 @@ def main(argv=None):
         if args.expect_disk_hits and pc["disk_loads"] == 0:
             raise SystemExit("prefix cache: expected disk loads from "
                              f"{args.prefix_cache_dir}, got none")
+    if args.trace_out:
+        trace = telemetry.export_trace()
+        errs = validate_trace(trace)
+        if errs:
+            raise SystemExit("trace schema violations:\n  "
+                             + "\n  ".join(errs[:10]))
+        with open(args.trace_out, "w") as f:
+            json.dump(trace, f)
+        print(f"trace: {len(trace['traceEvents'])} events -> "
+              f"{args.trace_out} (schema valid; open at ui.perfetto.dev)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(telemetry.render_prometheus())
+        print(f"metrics: {len(telemetry.registry.names())} series -> "
+              f"{args.metrics_out}")
+    if telemetry.memory is not None:
+        reg = telemetry.registry
+        rss = reg.get("serve_host_rss_peak_bytes").value / 2**20
+        dev = reg.get("serve_device_peak_bytes").value / 2**20
+        print(f"memory: host rss peak {rss:.0f} MiB"
+              + (f", device peak {dev:.0f} MiB" if dev else
+                 " (device allocator stats unavailable on this backend)"))
+    if args.warm:
+        sizes = telemetry.watchdog.cache_sizes()
+        retr = telemetry.watchdog.retraces
+        print(f"retraces: {retr} mid-serve recompiles (jit cache: "
+              + ", ".join(f"{k}={v}" for k, v in sizes.items()) + ")")
+        if args.expect_no_retraces and retr > 0:
+            raise SystemExit(
+                f"{retr} jitted entry points recompiled mid-serve (jit "
+                "cache grew after the warm-up baseline) — a compile "
+                "stalled a live decode tick")
     return outs
 
 

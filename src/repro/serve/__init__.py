@@ -6,10 +6,17 @@ from repro.serve.prefix_cache import (PrefixCache, params_fingerprint,
 from repro.serve.sampling import (SamplingParams, SlotSampling, request_key,
                                   sample_first, sample_step, sample_token)
 from repro.serve.scheduler import PrefillJob, PrefillScheduler
+from repro.serve.telemetry import (Counter, Gauge, Histogram, MemorySampler,
+                                   MetricsRegistry, RetraceWatchdog,
+                                   Telemetry, Tracer, format_event,
+                                   validate_trace)
 
-__all__ = ["DecodeState", "GenerationResult", "PartialPrefill",
+__all__ = ["Counter", "DecodeState", "Gauge", "GenerationResult",
+           "Histogram", "MemorySampler", "MetricsRegistry", "PartialPrefill",
            "PrefillJob", "PrefillScheduler", "PrefixCache", "Request",
-           "RequestOutput", "SamplingParams", "ServeEngine", "SlotSampling",
-           "bucket_chunks", "generate", "make_serve_fns",
+           "RequestOutput", "RetraceWatchdog", "SamplingParams",
+           "ServeEngine", "SlotSampling", "Telemetry", "Tracer",
+           "bucket_chunks", "format_event", "generate", "make_serve_fns",
            "params_fingerprint", "request_key", "sample_first",
-           "sample_step", "sample_token", "snapshot_nbytes"]
+           "sample_step", "sample_token", "snapshot_nbytes",
+           "validate_trace"]

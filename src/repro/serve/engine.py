@@ -67,6 +67,7 @@ from repro.serve.sampling import (SamplingParams, device_scalars,
                                   init_slot_keys, init_slot_sampling,
                                   request_key, sample_first, sample_step)
 from repro.serve.scheduler import PrefillScheduler
+from repro.serve.telemetry import Telemetry
 
 
 def make_serve_fns(model, cfg):
@@ -235,6 +236,14 @@ class ServeEngine:
     jitter. `overlap=True` additionally pipelines the host: chunk and tick
     dispatches never block, and tokens are synced one tick late (emitted
     tokens stay bit-identical to the lockstep engine's).
+
+    `telemetry` (serve/telemetry.py) carries the engine's observability:
+    its MetricsRegistry is ALWAYS the accounting substrate (`stats()` is
+    a thin view over it), its Tracer records the request/tick event
+    timeline when enabled, and its watchdog/memory hooks run per tick.
+    The default `Telemetry()` keeps tracing and memory sampling off —
+    the zero-overhead configuration. One Telemetry per engine: the
+    registry holds gauges reading this engine's live state.
     """
 
     def __init__(self, model, cfg, params, *, slots: int = 4,
@@ -243,7 +252,8 @@ class ServeEngine:
                  min_snapshot_blocks: int = 1,
                  logprobs: bool = False,
                  prefill_budget: int | None = None,
-                 overlap: bool = False):
+                 overlap: bool = False,
+                 telemetry: Telemetry | None = None):
         if model.state is None:
             raise NotImplementedError(
                 f"{cfg.name!r} exposes no DecodeState; ServeEngine serves "
@@ -264,6 +274,7 @@ class ServeEngine:
         self._next_rid = 0
         self._slots = [_Slot() for _ in range(slots)]
         self._pending: _TickRecord | None = None  # overlap double buffer
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
 
         state = self.state
 
@@ -410,6 +421,17 @@ class ServeEngine:
         self._install_slot = jax.jit(install_slot, donate_argnums=(0,))
         self._decode = jax.jit(decode_all, donate_argnums=(5,))
 
+        # retrace watchdog: every jitted entry point's jit-cache size is
+        # sampled per tick; growth after reset_stats() (= warm-up done) is
+        # a mid-serve recompile stalling a live tick, counted and flagged
+        for _name, _fn in (("prefill", self._prefill),
+                           ("prefill_resume", self._prefill_resume),
+                           ("fresh_slot", self._fresh_slot),
+                           ("restore", self._restore),
+                           ("install_slot", self._install_slot),
+                           ("decode", self._decode)):
+            self.telemetry.watchdog.register(_name, _fn)
+
         # the chunked admission scheduler drives the jitted prefill fns;
         # all its dispatches are asynchronous (the host syncs on sampled
         # tokens only)
@@ -424,19 +446,79 @@ class ServeEngine:
             prefix_cache=prefix_cache,
             min_snapshot_blocks=min_snapshot_blocks,
             budget=prefill_budget,
-            resume_lens=self._resume_lens)
+            resume_lens=self._resume_lens,
+            tracer=self.telemetry.tracer)
+        if prefix_cache is not None:
+            prefix_cache.attach_tracer(self.telemetry.tracer)
 
-        # accounting
-        self.total_prefill_s = 0.0
-        self.total_decode_s = 0.0
-        self.decode_steps = 0
-        self.prefills = 0
-        self.sampled_requests = 0
-        # observability windows: bounded deques — a long-lived engine must
-        # not grow host memory per emitted token, and percentiles over the
-        # recent window are what an operator actually watches
-        self._itl: deque[float] = deque(maxlen=65536)
-        self._tick_gaps: deque[float] = deque(maxlen=16384)
+        # Accounting lives in the telemetry registry; stats() is a thin
+        # view over it and the Prometheus exposition reads the same
+        # numbers. Histograms keep bounded raw-value windows — a
+        # long-lived engine must not grow host memory per emitted token,
+        # and percentiles over the recent window are what an operator
+        # actually watches.
+        reg = self.telemetry.registry
+        self._m_prefills = reg.counter(
+            "serve_prefills_total", "prefills installed into slots")
+        self._m_sampled = reg.counter(
+            "serve_sampled_requests_total",
+            "installed requests with non-greedy sampling")
+        self._m_ticks = reg.counter(
+            "serve_decode_ticks_total", "jitted decode ticks dispatched")
+        self._m_tokens = reg.counter(
+            "serve_tokens_total", "tokens emitted (first + decode)")
+        self._m_finished = reg.counter(
+            "serve_requests_finished_total",
+            "retired requests by finish reason", labels=("reason",))
+        self._m_prefill_s = reg.counter(
+            "serve_prefill_seconds_total",
+            "admission dispatch + lockstep first-token sync wall time")
+        self._m_decode_s = reg.counter(
+            "serve_decode_seconds_total", "decode pipeline wall time")
+        self._m_ttft = reg.histogram(
+            "serve_ttft_ms", "submit -> first token (prefill argmax)",
+            edges=self.TTFT_EDGES_MS)
+        self._m_itl = reg.histogram(
+            "serve_itl_ms", "inter-token latency across all requests",
+            edges=self.ITL_EDGES_MS)
+        self._m_tick_gap = reg.histogram(
+            "serve_tick_gap_ms",
+            "host-observed gap between consecutive decode-tick "
+            "completions within a busy streak",
+            edges=self.TICK_GAP_EDGES_MS, window=16384)
+        reg.gauge("serve_slots", "decode slots", fn=lambda: float(slots))
+        reg.gauge("serve_active_requests",
+                  "slots with an installed decoding request",
+                  fn=lambda: float(self.n_active))
+        reg.gauge("serve_queue_depth", "requests waiting for a slot",
+                  fn=lambda: float(len(self.queue)))
+        sch = self.scheduler
+        reg.counter("serve_scheduler_chunks_total",
+                    "prefill chunks dispatched", fn=lambda: sch.chunks)
+        reg.counter("serve_scheduler_chunk_tokens_total",
+                    "prompt tokens dispatched as chunks",
+                    fn=lambda: sch.chunk_tokens)
+        reg.counter("serve_scheduler_coalesced_total",
+                    "admissions parked on an in-flight shared prefix",
+                    fn=lambda: sch.coalesced)
+        reg.counter("serve_scheduler_promote_splits_total",
+                    "prefix-cache promote splits planned",
+                    fn=lambda: sch.promotes)
+        reg.gauge("serve_scheduler_inflight", "prefills in flight",
+                  fn=lambda: float(len(sch.jobs)))
+        if prefix_cache is not None:
+            pc = prefix_cache
+            reg.counter("serve_prefix_cache_lookups_total",
+                        "prefix-cache probes", fn=lambda: pc.lookups)
+            reg.counter("serve_prefix_cache_hits_total",
+                        "probes that restored a snapshot",
+                        fn=lambda: pc.hits)
+            reg.counter("serve_prefix_cache_hit_tokens_total",
+                        "prompt tokens skipped via snapshot restore",
+                        fn=lambda: pc.hit_tokens)
+            reg.counter("serve_prefix_cache_evictions_total",
+                        "snapshots evicted", fn=lambda: pc.evictions)
+
         # gap anchor: the previous tick's sync time within the current
         # busy streak; None across idle periods, so a bursty workload's
         # think time between requests never reads as a decode stall
@@ -463,9 +545,15 @@ class ServeEngine:
                 f"exceeds engine max_len={self.max_len}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens, eos_id,
-                                  time.perf_counter(),
-                                  sampling or SamplingParams()))
+        req = Request(rid, prompt, max_new_tokens, eos_id,
+                      time.perf_counter(), sampling or SamplingParams())
+        self.queue.append(req)
+        tr = self.telemetry.tracer
+        if tr:
+            tr.instant("queue", "submit", rid=rid,
+                       prompt_len=int(prompt.shape[0]),
+                       max_new=int(max_new_tokens),
+                       sampling=req.sampling.describe())
         return rid
 
     @property
@@ -478,6 +566,35 @@ class ServeEngine:
     def busy(self) -> bool:
         return (bool(self.queue) or self.scheduler.active
                 or self.n_active > 0 or self._pending is not None)
+
+    # legacy accounting attributes, now views over the telemetry registry
+    # (one source of truth for stats(), the Prometheus exposition, and
+    # these) — external callers keep reading the same names
+
+    @property
+    def total_prefill_s(self) -> float:
+        return self._m_prefill_s.value
+
+    @property
+    def total_decode_s(self) -> float:
+        return self._m_decode_s.value
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self._m_ticks.value)
+
+    @property
+    def prefills(self) -> int:
+        return int(self._m_prefills.value)
+
+    @property
+    def sampled_requests(self) -> int:
+        return int(self._m_sampled.value)
+
+    @property
+    def _tick_gaps(self) -> np.ndarray:
+        """Recent tick-gap window in SECONDS (the histogram stores ms)."""
+        return np.asarray(self._m_tick_gap.window, np.float64) * 1e-3
 
     def _retire(self, si: int, reason: str) -> RequestOutput:
         slot = self._slots[si]
@@ -496,6 +613,12 @@ class ServeEngine:
         slot.lps = []
         slot.last_tok_s = None
         self.finished.append(out)
+        self._m_finished.labels(reason=reason).inc()
+        tr = self.telemetry.tracer
+        if tr:
+            tr.end(f"slot{si}", rid=out.rid, reason=reason)  # decode span
+            tr.instant(f"slot{si}", "retire", rid=out.rid, reason=reason,
+                       tokens=int(len(out.tokens)))
         return out
 
     def _check_finished(self, si: int) -> RequestOutput | None:
@@ -540,19 +663,30 @@ class ServeEngine:
             jnp.asarray(req.prompt.shape[0], jnp.int32),
             *device_scalars(req.sampling))
         self._slots[si].prefilling = False
-        self.prefills += 1
+        self._m_prefills.inc()
         if not req.sampling.is_greedy:
-            self.sampled_requests += 1
+            self._m_sampled.inc()
+        tr = self.telemetry.tracer
+        if tr:
+            tr.end(f"slot{si}", rid=req.rid)  # prefill span
+            tr.begin(f"slot{si}", "decode", rid=req.rid,
+                     prompt_len=int(req.prompt.shape[0]))
         return (si, req.rid, tok, lp)
 
-    def _note_token(self, slot: _Slot, now: float):
+    def _note_token(self, slot: _Slot, now: float) -> float | None:
+        """Returns this token's inter-token latency in ms (None for a
+        request's first token)."""
+        itl_ms = None
         if slot.last_tok_s is not None:
-            self._itl.append(now - slot.last_tok_s)
+            itl_ms = (now - slot.last_tok_s) * 1e3
+            self._m_itl.observe(itl_ms)
         slot.last_tok_s = now
+        return itl_ms
 
     def _append_firsts(self, firsts, done, now: float):
         """Record admissions' first tokens (host sync per token future —
         they were dispatched together, so the first wait covers all)."""
+        tr = self.telemetry.tracer
         for si, rid, tok, lp in firsts:
             slot = self._slots[si]
             req = slot.request
@@ -562,7 +696,12 @@ class ServeEngine:
             if self.logprobs:
                 slot.lps.append(float(np.asarray(lp)))
             slot.ttft_s = now - req.submit_time
+            self._m_ttft.observe(slot.ttft_s * 1e3)
+            self._m_tokens.inc()
             self._note_token(slot, now)
+            if tr:
+                tr.instant(f"slot{si}", "first_token", rid=rid,
+                           ttft_ms=round(slot.ttft_s * 1e3, 3))
             fin = self._check_finished(si)
             if fin is not None:
                 done.append(fin)
@@ -583,7 +722,7 @@ class ServeEngine:
          self._slot_caches) = self._decode(
             self.params, self._slot_tokens, self._slot_pos, self._slot_keys,
             self._slot_samp, self._slot_caches, jnp.asarray(active))
-        self.decode_steps += 1
+        self._m_ticks.inc()
         return _TickRecord(toks, lps, active, rids, firsts, t0)
 
     def _sync_record(self, rec: _TickRecord, done):
@@ -592,9 +731,14 @@ class ServeEngine:
         admissions recorded on this tick are appended first; a slot whose
         request retired (or was replaced) since dispatch fails the rid
         check and its speculative token is dropped."""
+        tr = self.telemetry.tracer
+        if tr:
+            tr.begin("tick", "host_sync")
         toks = np.asarray(rec.toks)
         lps = np.asarray(rec.lps) if self.logprobs else None
         now = time.perf_counter()
+        if tr:
+            tr.end("tick", slots=int(rec.active.sum()))
         # NB: with a prefill budget (or overlap), admission chunk work
         # dispatched ahead of this tick executes on the same device stream
         # and is absorbed into this wait — decode_s measures the decode
@@ -602,11 +746,13 @@ class ServeEngine:
         # holds admission host dispatch + lockstep first-token sync time
         t_ref = (rec.t_dispatch if self._last_sync is None
                  else max(rec.t_dispatch, self._last_sync))
-        self.total_decode_s += now - t_ref
+        self._m_decode_s.inc(now - t_ref)
         self._last_sync = now
         if self._gap_anchor is not None:
-            self._tick_gaps.append(now - self._gap_anchor)
+            self._m_tick_gap.observe((now - self._gap_anchor) * 1e3)
         self._gap_anchor = now
+        if tr:
+            tr.begin("tick", "retire")
         self._append_firsts(rec.firsts, done, now)
         for si, slot in enumerate(self._slots):
             if not rec.active[si]:
@@ -617,10 +763,16 @@ class ServeEngine:
             slot.emitted.append(int(toks[si]))
             if self.logprobs:
                 slot.lps.append(float(lps[si]))
-            self._note_token(slot, now)
+            self._m_tokens.inc()
+            itl_ms = self._note_token(slot, now)
+            if tr:
+                tr.instant(f"slot{si}", "token", rid=req.rid,
+                           itl_ms=round(itl_ms, 3) if itl_ms else 0.0)
             fin = self._check_finished(si)
             if fin is not None:
                 done.append(fin)
+        if tr:
+            tr.end("tick", retired=len(done))
         if not any(s.decoding for s in self._slots) and self._pending is None:
             # busy streak over (nothing decoding, no tick in flight): the
             # interval until the next admission's tick is idle time, not a
@@ -640,24 +792,45 @@ class ServeEngine:
 
         Returns requests that finished this tick."""
         done: list[RequestOutput] = []
+        tr = self.telemetry.tracer
+        if tr:
+            tr.begin("tick", "tick", n=int(self._m_ticks.value))
+            tr.begin("tick", "plan")
         self._start_admissions()
+        if tr:
+            tr.end("tick")
         t0 = time.perf_counter()
+        if tr:
+            tr.begin("tick", "chunk_dispatch")
         firsts = [self._install(job) for job in self.scheduler.tick()]
         if not self.overlap and firsts:
             # one host sync for every admission this tick (the dispatches
             # above all ran back-to-back without blocking)
             jax.block_until_ready(firsts[-1][2])
-        self.total_prefill_s += time.perf_counter() - t0
+        if tr:
+            tr.end("tick", installs=len(firsts))
+        self._m_prefill_s.inc(time.perf_counter() - t0)
         if self.overlap:
+            if tr:
+                tr.begin("tick", "decode_dispatch")
             rec = self._dispatch_decode(firsts)
+            if tr:
+                tr.end("tick")
             prev, self._pending = self._pending, rec
             if prev is not None:
                 self._sync_record(prev, done)
         else:
             self._append_firsts(firsts, done, time.perf_counter())
+            if tr:
+                tr.begin("tick", "decode_dispatch")
             rec = self._dispatch_decode([])
+            if tr:
+                tr.end("tick")
             if rec is not None:
                 self._sync_record(rec, done)
+        if tr:
+            tr.end("tick")  # the enclosing per-tick span
+        self.telemetry.on_tick()
         return done
 
     def run(self) -> list[RequestOutput]:
@@ -674,28 +847,25 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def reset_stats(self):
-        """Zero the accounting (e.g. after a compile warm-up run)."""
+        """Zero the accounting (e.g. after a compile warm-up run) and mark
+        the jit caches steady: any compiled-trace growth after this point
+        is a mid-serve recompile the retrace watchdog counts."""
         self.finished = []
-        self.total_prefill_s = self.total_decode_s = 0.0
-        self.decode_steps = self.prefills = self.sampled_requests = 0
-        self._itl.clear()
-        self._tick_gaps.clear()
         self._gap_anchor = None
         self._last_sync = None
+        self.telemetry.reset()
         self.scheduler.reset_stats()
         if self.prefix_cache is not None:
             self.prefix_cache.reset_stats()
 
-    # TTFT histogram bucket edges (milliseconds, final bucket open-ended)
+    # histogram bucket edges (milliseconds, final bucket open-ended);
+    # registry semantics are Prometheus `le`: a value exactly on an edge
+    # falls in the bucket that edge bounds
     TTFT_EDGES_MS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0,
                      1000.0, float("inf"))
-
-    @staticmethod
-    def _pcts(xs, ps=(50, 95, 99)):
-        if not len(xs):
-            return {f"p{p}": 0.0 for p in ps}
-        arr = np.asarray(xs, np.float64)
-        return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+    ITL_EDGES_MS = (0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 250.0,
+                    1000.0, float("inf"))
+    TICK_GAP_EDGES_MS = ITL_EDGES_MS
 
     def stats(self) -> dict:
         # still-resident requests count too: total_decode_s includes the
@@ -708,25 +878,21 @@ class ServeEngine:
         # decode throughput counts only decode-step-produced tokens
         decode_tokens = (sum(o.decode_steps for o in self.finished)
                          + sum(max(len(s.emitted) - 1, 0) for s in live))
-        ttfts_ms = [o.ttft_s * 1e3 for o in self.finished]
-        edges = np.asarray(self.TTFT_EDGES_MS)
-        counts = np.zeros(len(edges), np.int64)
-        if ttfts_ms:
-            counts = np.bincount(np.searchsorted(edges[:-1], ttfts_ms,
-                                                 side="left"),
-                                 minlength=len(edges))
-        gaps_ms = np.asarray(self._tick_gaps) * 1e3
+        decode_s = self._m_decode_s.value
+        # tick_gap `median` and `p50` are one number from one code path
+        # (the registry histogram); both keys stay for compatibility
+        gap_p = self._m_tick_gap.percentiles()
         out = {
             "requests": len(self.finished),
             "active_requests": len(live),
             "generated_tokens": gen_tokens,
-            "prefills": self.prefills,
-            "sampled_requests": self.sampled_requests,
-            "decode_steps": self.decode_steps,
-            "prefill_s": self.total_prefill_s,
-            "decode_s": self.total_decode_s,
-            "decode_tok_per_s": (decode_tokens / self.total_decode_s
-                                 if self.total_decode_s else 0.0),
+            "prefills": int(self._m_prefills.value),
+            "sampled_requests": int(self._m_sampled.value),
+            "decode_steps": int(self._m_ticks.value),
+            "prefill_s": self._m_prefill_s.value,
+            "decode_s": decode_s,
+            "decode_tok_per_s": (decode_tokens / decode_s
+                                 if decode_s else 0.0),
             # observability for the stall this engine's scheduler removes:
             # inter-token latency across all requests, TTFT distribution,
             # and the host-observed gap between CONSECUTIVE decode-tick
@@ -734,15 +900,16 @@ class ServeEngine:
             # bursts are excluded, so an admission that stalls decode
             # shows up as a max gap far above the median while think time
             # between requests never does (recent bounded window)
-            "itl_ms": self._pcts([g * 1e3 for g in self._itl]),
-            "ttft_ms": self._pcts(ttfts_ms),
+            "itl_ms": self._m_itl.percentiles(),
+            "ttft_ms": self._m_ttft.percentiles(),
             "ttft_hist": {"edges_ms": list(self.TTFT_EDGES_MS),
-                          "counts": counts.tolist()},
+                          "counts": self._m_ttft.counts},
             "tick_gap_ms": {
-                **self._pcts(gaps_ms),
-                "median": float(np.median(gaps_ms)) if len(gaps_ms) else 0.0,
-                "max": float(gaps_ms.max()) if len(gaps_ms) else 0.0,
+                **gap_p,
+                "median": gap_p["p50"],
+                "max": self._m_tick_gap.max,
             },
+            "retraces": self.telemetry.watchdog.retraces,
             "scheduler": self.scheduler.stats(),
         }
         if self.prefix_cache is not None:

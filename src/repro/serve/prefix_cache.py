@@ -157,6 +157,13 @@ class PrefixCache:
         self.hit_tokens = 0
         self.inserts = self.evictions = 0
         self.disk_loads = self.disk_writes = 0
+        self._tracer = None  # serve.telemetry.Tracer, engine-attached
+
+    def attach_tracer(self, tracer):
+        """Attach a serve-telemetry tracer: store internals (evictions,
+        disk-tier loads) emit instants on the "cache" track. Disabled
+        tracers cost one falsy check per event."""
+        self._tracer = tracer
 
     def bind_block_size(self, block_size: int):
         if self.block_size is None:
@@ -260,6 +267,9 @@ class PrefixCache:
             return False
         if self._admit(key, n_tokens, snapshot):
             self.disk_loads += 1
+            if self._tracer:
+                self._tracer.instant("cache", "disk_load",
+                                     n_tokens=int(n_tokens))
             return True
         self._mark_disk_skip(key)
         return False
@@ -396,6 +406,9 @@ class PrefixCache:
         old = self._entries.pop(victim)
         self.bytes -= old.nbytes
         self.evictions += 1
+        if self._tracer:
+            self._tracer.instant("cache", "evict", n_tokens=old.n_tokens,
+                                 nbytes=old.nbytes, hits=old.hits)
 
     def _admit(self, key: bytes, n_tokens: int, snapshot) -> bool:
         if key in self._entries:

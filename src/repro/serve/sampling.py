@@ -56,6 +56,19 @@ class SamplingParams:
     def is_greedy(self) -> bool:
         return self.greedy if self.greedy is not None else self.temperature <= 0.0
 
+    def describe(self) -> str:
+        """Compact human-readable form for telemetry event args and logs
+        ("greedy", "t=0.8", "t=0.8 k=40 p=0.95"). Omits defaults; the seed
+        is identity, not strategy, so it is not part of the description."""
+        if self.is_greedy:
+            return "greedy"
+        parts = [f"t={self.temperature:g}"]
+        if self.top_k:
+            parts.append(f"k={self.top_k}")
+        if self.top_p < 1.0:
+            parts.append(f"p={self.top_p:g}")
+        return " ".join(parts)
+
 
 class SlotSampling(NamedTuple):
     """Slot-stacked device mirror of SamplingParams (engine state)."""

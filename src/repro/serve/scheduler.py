@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.state import PartialPrefill, bucket_chunks
+from repro.serve.telemetry import NULL_TRACER
 
 
 @dataclass
@@ -80,10 +81,12 @@ class PrefillScheduler:
     def __init__(self, state, *, prefill_fn: Callable, resume_fn: Callable,
                  fresh_fn: Callable, restore_fn: Callable,
                  prefix_cache=None, min_snapshot_blocks: int = 1,
-                 budget: int | None = None, resume_lens: set | None = None):
+                 budget: int | None = None, resume_lens: set | None = None,
+                 tracer=None):
         if budget is not None and budget < 1:
             raise ValueError("prefill_budget must be >= 1 (or None)")
         self.state = state
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.prefill_fn = prefill_fn
         self.resume_fn = resume_fn
         self.fresh_fn = fresh_fn
@@ -117,6 +120,12 @@ class PrefillScheduler:
         job = PrefillJob(req=req, slot=slot,
                          prompt_np=np.asarray(req.prompt))
         self.started += 1
+        tr = self.tracer
+        if tr:
+            # the prefill span runs from slot reservation to slot install
+            # (the engine ends it); probe/park instants land inside it
+            tr.begin(f"slot{slot}", "prefill", rid=req.rid,
+                     prompt_len=int(req.prompt.shape[0]))
         self._plan(job)
         self.jobs.append(job)
         return job
@@ -136,6 +145,9 @@ class PrefillScheduler:
                 if job.wait_key in self.pending:
                     continue                   # producer still in flight
                 job.wait_key = None
+                if self.tracer:
+                    self.tracer.instant(f"slot{job.slot}", "unpark",
+                                        rid=job.req.rid)
                 self._plan(job)                # snapshot landed: replan
                 if job.waiting:
                     continue
@@ -152,6 +164,10 @@ class PrefillScheduler:
         replan instead of waiting forever)."""
         self._withdraw(job)
         self.jobs.remove(job)
+        tr = self.tracer
+        if tr:
+            tr.end(f"slot{job.slot}", rid=job.req.rid)  # prefill span
+            tr.instant(f"slot{job.slot}", "drop", rid=job.req.rid)
 
     def stats(self) -> dict:
         return {
@@ -226,9 +242,19 @@ class PrefillScheduler:
         if best_key is not None:
             job.wait_key = best_key
             self.coalesced += 1
+            if self.tracer:
+                self.tracer.instant(f"slot{job.slot}", "park",
+                                    rid=req.rid, depth=best_pos)
             return
 
         plan = self.pc.plan(job.prompt_np, min_blocks=self.min_blocks)
+        if self.tracer:
+            if plan.n_restore:
+                self.tracer.instant(f"slot{job.slot}", "cache_hit",
+                                    rid=req.rid, tokens=int(plan.n_restore))
+            else:
+                self.tracer.instant(f"slot{job.slot}", "cache_miss",
+                                    rid=req.rid)
         snap_at = {}
         if plan.n_promote:
             snap_at[plan.n_promote] = plan.promote_key
@@ -270,11 +296,15 @@ class PrefillScheduler:
         here; the engine syncs on sampled tokens only). Returns the chunk's
         token count for budget accounting."""
         cut = job.cuts.popleft()
+        tr = self.tracer
         if job.whole:
             logits, state = self.prefill_fn(job.req.prompt[None])
             job.part = PartialPrefill(state, cut, logits)
             self.chunks += 1
             self.chunk_tokens += cut
+            if tr:
+                tr.instant(f"slot{job.slot}", "chunk", rid=job.req.rid,
+                           pos=0, end=int(cut))
             return cut
         pos = job.part.n_tokens
         # host-side slice (free) + one h2d transfer beats two eager device
@@ -285,10 +315,16 @@ class PrefillScheduler:
         job.part = PartialPrefill(state, cut, logits)
         self.chunks += 1
         self.chunk_tokens += cut - pos
+        if tr:
+            tr.instant(f"slot{job.slot}", "chunk", rid=job.req.rid,
+                       pos=int(pos), end=int(cut))
         key = job.snap_at.get(cut)
         if key:
             self.pc.insert(key, cut, self.state.snapshot(state))
             self._materialized(job, key)
+            if tr:
+                tr.instant(f"slot{job.slot}", "snapshot", rid=job.req.rid,
+                           pos=int(cut))
         return cut - pos
 
     def _finish(self, job: PrefillJob):
@@ -296,6 +332,9 @@ class PrefillScheduler:
             self.pc.insert(job.final_key, job.final_pos,
                            self.state.snapshot(job.part.state))
             self._materialized(job, job.final_key)
+            if self.tracer:
+                self.tracer.instant(f"slot{job.slot}", "snapshot",
+                                    rid=job.req.rid, pos=int(job.final_pos))
         self._withdraw(job)
         self.jobs.remove(job)
         self.completed += 1
