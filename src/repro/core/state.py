@@ -140,6 +140,78 @@ def restore_state(fresh_state, snapshot, n_tokens):
 
 
 # ---------------------------------------------------------------------------
+# per-node sharding axes (mesh-aware serving)
+# ---------------------------------------------------------------------------
+#
+# Each cache-node type declares, per leaf, the tuple of logical axis names
+# distributed/sharding.py can partition. The contract is bit-parity under
+# resharding: only axes the decode/prefill math never REDUCES over may be
+# named (leading batch/slot axes, and the kv-head axis for attention-state
+# nodes — every polysketch/KV reduction runs within one head). Everything
+# else stays None (replicated), so emitted tokens are bit-identical on any
+# mesh shape.
+
+def heads_shard_axes(node):
+    """("batch", "kv_heads", ...) for the (B, Hkv, ...) leaves of an
+    attention-state node; batch-only for lower-rank leaves; () for the
+    scalar pos."""
+    def one(x):
+        nd = jnp.ndim(x)
+        if nd == 0:
+            return ()
+        if nd >= 4:
+            return ("batch", "kv_heads") + (None,) * (nd - 2)
+        return ("batch",) + (None,) * (nd - 1)
+    return jax.tree_util.tree_map(one, node)
+
+
+def batch_shard_axes(node):
+    """Leading-batch-only axes: the conservative declaration for recurrent
+    states whose channel mixing (conv over d_inner+2n channels) crosses
+    what a per-head split would cut."""
+    def one(x):
+        nd = jnp.ndim(x)
+        return ("batch",) + (None,) * (nd - 1) if nd else ()
+    return jax.tree_util.tree_map(one, node)
+
+
+# node type -> (node -> same-structure pytree of logical-name tuples);
+# populated by register_state from each StateSpec's shard_axes
+NODE_SHARD_AXES: dict[type, Callable] = {}
+
+
+def state_shard_axes(state, *, slot_stacked: bool = False):
+    """Logical-axes pytree mirroring a model cache pytree (per-node
+    dispatch through the kind registry's declarations; leaves are tuples
+    of logical names, consumable by distributed.sharding.shardings_for).
+
+    ``slot_stacked=True`` prepends a "batch" name per leaf for the
+    engine's slot-stacked form (leading slot axis over batch-1 caches) —
+    slots then spread over the "data" mesh axis while the inner batch-1
+    dim degrades to replicated via spec_for's used-set."""
+    def node_axes(node):
+        fn = NODE_SHARD_AXES.get(type(node), batch_shard_axes)
+        if not slot_stacked:
+            return fn(node)
+        # the helpers key off leaf rank, so show them the UNSTACKED
+        # leaves (drop the leading slot axis), then prepend the slot
+        # dim's "batch" name
+        inner = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), node)
+
+        def is_names(t):
+            # NB: cache nodes are NamedTuples (tuples themselves), so the
+            # leaf test must check the *elements* are axis names
+            return isinstance(t, tuple) and not isinstance(t, type(node)) \
+                and all(isinstance(e, (str, type(None))) for e in t)
+
+        return jax.tree_util.tree_map(
+            lambda names: ("batch",) + tuple(names),
+            fn(inner), is_leaf=is_names)
+    return jax.tree_util.tree_map(node_axes, state, is_leaf=is_state_node)
+
+
+# ---------------------------------------------------------------------------
 # the kind registry
 # ---------------------------------------------------------------------------
 
@@ -151,6 +223,9 @@ class StateSpec:
     granularity: str | None     # see module docstring
     resumable: bool             # prefill can continue from a prior state
     init: Callable              # (cfg, batch, max_len, dtype) -> cache node
+    # (node) -> same-structure pytree of logical-axis-name tuples naming
+    # the partitionable dims (see state_shard_axes); None = batch-only
+    shard_axes: Callable | None = None
 
 
 REGISTRY: dict[str, StateSpec] = {}
@@ -158,6 +233,8 @@ REGISTRY: dict[str, StateSpec] = {}
 
 def register_state(spec: StateSpec) -> StateSpec:
     REGISTRY[spec.kind] = spec
+    if spec.shard_axes is not None:
+        NODE_SHARD_AXES[spec.node_type] = spec.shard_axes
     return spec
 
 
@@ -173,26 +250,30 @@ register_state(StateSpec(
     granularity="block", resumable=True,
     init=lambda cfg, batch, max_len, dtype: dec.init_polysketch_cache(
         batch, cfg.n_kv_heads, cfg.resolved_head_dim, cfg.sketch_size,
-        cfg.lt_block_size, dtype)))
+        cfg.lt_block_size, dtype),
+    shard_axes=heads_shard_axes))
 
 register_state(StateSpec(
     kind="kv_full", node_type=dec.KVCache,
     granularity=None, resumable=False,
     init=lambda cfg, batch, max_len, dtype: dec.init_kv_cache(
-        batch, cfg.n_kv_heads, cfg.resolved_head_dim, max_len, dtype)))
+        batch, cfg.n_kv_heads, cfg.resolved_head_dim, max_len, dtype),
+    shard_axes=heads_shard_axes))
 
 register_state(StateSpec(
     kind="poly_kv", node_type=dec.KVCache,
     granularity=None, resumable=False,
     init=lambda cfg, batch, max_len, dtype: dec.init_kv_cache(
-        batch, cfg.n_kv_heads, cfg.resolved_head_dim, max_len, dtype)))
+        batch, cfg.n_kv_heads, cfg.resolved_head_dim, max_len, dtype),
+    shard_axes=heads_shard_axes))
 
 register_state(StateSpec(
     kind="kv_ring", node_type=dec.RingKVCache,
     granularity="token", resumable=True,
     init=lambda cfg, batch, max_len, dtype: dec.init_ring_cache(
         batch, cfg.n_kv_heads, cfg.resolved_head_dim,
-        min(cfg.sliding_window, max_len), dtype)))
+        min(cfg.sliding_window, max_len), dtype),
+    shard_axes=heads_shard_axes))
 
 
 def mixer_state_kind(cfg, mixer: str) -> str:

@@ -32,6 +32,13 @@ DEFAULT_RULES: dict[str | None, tuple[str, ...]] = {
     "kv_heads": ("model",),
     "head_dim": ("model",),
     "mlp": ("model",),
+    # pre-contraction activation gather points (models/attention.py _out,
+    # models/layers.py glu_ffn_apply): training keeps them sharded on
+    # "model" (Megatron: contract the sharded axis, psum after); serving
+    # rules map them to () so the contraction runs on gathered operands
+    # and FP summation order never depends on the mesh (bit-parity)
+    "act_heads": ("model",),
+    "act_mlp": ("model",),
     "experts": ("model",),
     "rnn": ("model",),
     "rnn2": (),

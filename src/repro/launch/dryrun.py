@@ -36,9 +36,9 @@ from repro.optim.adamw import AdamWState
 from repro.serve.engine import make_serve_fns
 from repro.train.step import TrainState, make_train_step
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+from repro.launch.hw_specs import (TPU_V5E_HBM_BW as HBM_BW,
+                                   TPU_V5E_LINK_BW as LINK_BW,
+                                   TPU_V5E_PEAK_FLOPS as PEAK_FLOPS)
 
 
 def abstract_init(model, key=None):

@@ -1,0 +1,19 @@
+"""Accelerator hardware constants, import-side-effect free.
+
+`launch/dryrun.py` must set XLA_FLAGS at import time (before jax
+initializes) to fake a 512-chip topology — importing it from anywhere
+else poisons the process's device configuration. The roofline model
+needs the same peak numbers, so they live here, in a module that touches
+nothing: both importers stay honest and the constants exist exactly
+once.
+
+TPU v5e (per chip): bf16 peak FLOPs, HBM bandwidth, and per-link ICI
+bandwidth.
+"""
+from __future__ import annotations
+
+TPU_V5E_PEAK_FLOPS = 197e12   # bf16 FLOP/s
+TPU_V5E_HBM_BW = 819e9        # bytes/s
+TPU_V5E_LINK_BW = 50e9        # bytes/s per ICI link direction
+
+__all__ = ["TPU_V5E_HBM_BW", "TPU_V5E_LINK_BW", "TPU_V5E_PEAK_FLOPS"]

@@ -14,18 +14,17 @@ decode kernels have to close.
 
 NB: deliberately does NOT import launch.dryrun — that module forces a
 512-device host platform via XLA_FLAGS at import time, which would poison
-any process that also runs real engine code. The hardware constants are
-duplicated here instead.
+any process that also runs real engine code. The shared hardware
+constants live in the side-effect-free launch.hw_specs.
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-# TPU v5e reference part (same model as launch/dryrun.py, not imported —
-# see module docstring): peak dense bf16 FLOP/s and HBM bandwidth B/s
-TPU_V5E_PEAK_FLOPS = 197e12
-TPU_V5E_HBM_BW = 819e9
+# TPU v5e reference part (shared with launch/dryrun.py via hw_specs —
+# see module docstring); re-exported here for existing importers
+from repro.launch.hw_specs import TPU_V5E_HBM_BW, TPU_V5E_PEAK_FLOPS
 
 
 def tick_roofline(flops: float, bytes_accessed: float, *,

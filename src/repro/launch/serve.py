@@ -49,9 +49,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import make_serving_mesh
 from repro.models import build_model
-from repro.serve import (PrefixCache, SamplingParams, ServeEngine, Telemetry,
-                         format_event, generate, validate_trace)
+from repro.serve import (PrefixCache, SamplingParams, ServeEngine,
+                         ServePlan, Telemetry, format_event, generate,
+                         validate_trace)
 
 
 def _percentile(xs, p):
@@ -166,6 +168,19 @@ def main(argv=None):
                     help="exit nonzero if any jitted entry point "
                          "recompiled mid-serve (requires --warm so the "
                          "watchdog has a steady baseline)")
+    ap.add_argument("--mesh", default="1x1", metavar="DxM",
+                    help="serving mesh as data x model device counts "
+                         "(e.g. 4x2); needs d*m visible devices — on CPU "
+                         "set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=<d*m>. Default 1x1 (single device)")
+    ap.add_argument("--shard-model", action="store_true",
+                    help="tensor-parallel params over the mesh's 'model' "
+                         "axis (heads/ffn/vocab output dims via spec_for); "
+                         "off = params replicated on every device")
+    ap.add_argument("--tokens-out", default=None,
+                    help="write every request's emitted tokens (and "
+                         "logprobs with --logprobs) as JSON keyed by rid; "
+                         "the CI mesh bit-parity gate diffs these files")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.expect_no_retraces and not args.warm:
@@ -173,11 +188,20 @@ def main(argv=None):
                          "warm-up pass every compile is expected, so the "
                          "gate would be vacuous)")
 
+    try:
+        mesh_d, mesh_m = (int(x) for x in args.mesh.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh wants DxM (e.g. 4x2), got {args.mesh!r}")
+    mesh = make_serving_mesh(mesh_d * mesh_m, model_parallel=mesh_m)
+    plan = ServePlan.from_mesh(mesh, shard_model=args.shard_model)
+    print(f"mesh: {plan.describe()} ({plan.n_devices} devices, "
+          f"params {'sharded' if args.shard_model else 'replicated'})")
+
     overrides = {"lt_block_size": args.block_size} if args.block_size else {}
     cfg = get_config(args.arch, smoke=args.smoke, **overrides)
     model = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
-    params, _ = model.init(key)
+    params, param_axes = model.init(key)
 
     prefix_cache = (PrefixCache(int(args.prefix_cache_mb * 2 ** 20),
                                 save_dir=args.prefix_cache_dir)
@@ -199,7 +223,8 @@ def main(argv=None):
                          logprobs=args.logprobs,
                          prefill_budget=args.prefill_budget or None,
                          overlap=args.overlap,
-                         telemetry=telemetry)
+                         telemetry=telemetry,
+                         plan=plan, param_axes=param_axes)
     rng = np.random.default_rng(args.seed)
 
     eos = None if args.eos_id < 0 else args.eos_id
@@ -339,6 +364,22 @@ def main(argv=None):
         if args.expect_disk_hits and pc["disk_loads"] == 0:
             raise SystemExit("prefix cache: expected disk loads from "
                              f"{args.prefix_cache_dir}, got none")
+    if args.tokens_out:
+        # float(np.float32) goes through float64, and JSON round-trips
+        # float64 exactly — so diffing two tokens-out files is a BIT
+        # comparison of tokens and logprobs (the mesh-parity CI gate)
+        payload = {
+            str(o.rid): {
+                "tokens": [int(t) for t in o.tokens],
+                "prompt_len": o.prompt_len,
+                "finish_reason": o.finish_reason,
+                **({"logprobs": [float(x) for x in o.logprobs]}
+                   if o.logprobs is not None else {}),
+            } for o in outs}
+        with open(args.tokens_out, "w") as f:
+            json.dump({"mesh": plan.describe(), "arch": args.arch,
+                       "outputs": payload}, f, sort_keys=True)
+        print(f"tokens: {len(payload)} requests -> {args.tokens_out}")
     if args.trace_out:
         trace = telemetry.export_trace()
         errs = validate_trace(trace)

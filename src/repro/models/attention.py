@@ -85,6 +85,10 @@ def _poly_ln(params, q, k):
 
 def _out(params, y):
     """y: (B, Hq, S, h) -> (B, S, D)."""
+    # the einsum contracts heads: "act_heads" resolves to "model" under
+    # training rules (Megatron partial-sum) but to () under serving rules
+    # so the reduction order is mesh-independent (bit-parity)
+    y = shard_act(y, "batch", "act_heads")
     return jnp.einsum("bnsh,nhd->bsd", y, params["wo"].astype(y.dtype))
 
 

@@ -9,6 +9,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import shard_act
 from repro.utils import merge_trees
 
 
@@ -87,6 +88,9 @@ def glu_ffn_init(key, d_model, d_ff):
 def glu_ffn_apply(params, x):
     dt = x.dtype
     h = jax.nn.gelu(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+    # "act_mlp": sharded under training rules, gathered under serving
+    # rules before the d_ff contraction (see attention._out)
+    h = shard_act(h, "batch", "seq", "act_mlp")
     return h @ params["wo"].astype(dt)
 
 

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.decode import RecurrentCache
-from repro.core.state import StateSpec, register_state
+from repro.core.state import StateSpec, batch_shard_axes, register_state
 from repro.distributed.sharding import shard_act
 from repro.models.layers import dense_init
 
@@ -157,7 +157,8 @@ register_state(StateSpec(
     kind="rglru", node_type=RecurrentCache, granularity="token",
     resumable=True,
     init=lambda cfg, batch, max_len, dtype: rglru_init_cache(cfg, batch,
-                                                             dtype)))
+                                                             dtype),
+    shard_axes=batch_shard_axes))
 
 
 def rglru_sequential_ref(params, cfg, x):

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.decode import RecurrentCache
-from repro.core.state import StateSpec, register_state
+from repro.core.state import StateSpec, batch_shard_axes, register_state
 from repro.distributed.sharding import shard_act
 from repro.models.layers import dense_init
 
@@ -273,7 +273,10 @@ register_state(StateSpec(
     kind="ssd", node_type=RecurrentCache, granularity="token",
     resumable=True,
     init=lambda cfg, batch, max_len, dtype: ssm_init_cache(cfg, batch,
-                                                           dtype)))
+                                                           dtype),
+    # batch-only: the depthwise conv mixes d_inner+2n channels, so a
+    # per-head split would cut across a reduced dim (bit-parity hazard)
+    shard_axes=batch_shard_axes))
 
 
 def ssd_sequential_ref(x, b, c, dt, a_log):

@@ -1,6 +1,7 @@
 from repro.core.state import DecodeState, PartialPrefill, bucket_chunks
 from repro.serve.engine import (GenerationResult, Request, RequestOutput,
                                 ServeEngine, generate, make_serve_fns)
+from repro.serve.plan import PARAM_RULES, SERVING_RULES, ServePlan
 from repro.serve.prefix_cache import (PrefixCache, params_fingerprint,
                                       snapshot_nbytes)
 from repro.serve.sampling import (SamplingParams, SlotSampling, request_key,
@@ -12,10 +13,11 @@ from repro.serve.telemetry import (Counter, Gauge, Histogram, MemorySampler,
                                    validate_trace)
 
 __all__ = ["Counter", "DecodeState", "Gauge", "GenerationResult",
-           "Histogram", "MemorySampler", "MetricsRegistry", "PartialPrefill",
-           "PrefillJob", "PrefillScheduler", "PrefixCache", "Request",
-           "RequestOutput", "RetraceWatchdog", "SamplingParams",
-           "ServeEngine", "SlotSampling", "Telemetry", "Tracer",
+           "Histogram", "MemorySampler", "MetricsRegistry", "PARAM_RULES",
+           "PartialPrefill", "PrefillJob", "PrefillScheduler", "PrefixCache",
+           "Request", "RequestOutput", "RetraceWatchdog", "SERVING_RULES",
+           "SamplingParams", "ServeEngine", "ServePlan", "SlotSampling",
+           "Telemetry", "Tracer",
            "bucket_chunks", "format_event", "generate", "make_serve_fns",
            "params_fingerprint", "request_key", "sample_first",
            "sample_step", "sample_token", "snapshot_nbytes",

@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.plan import ServePlan
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampling import (SamplingParams, device_scalars,
                                   init_slot_keys, init_slot_sampling,
@@ -253,7 +254,9 @@ class ServeEngine:
                  logprobs: bool = False,
                  prefill_budget: int | None = None,
                  overlap: bool = False,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 plan: ServePlan | None = None,
+                 param_axes=None):
         if model.state is None:
             raise NotImplementedError(
                 f"{cfg.name!r} exposes no DecodeState; ServeEngine serves "
@@ -262,7 +265,12 @@ class ServeEngine:
             raise ValueError("need at least one decode slot")
         if min_snapshot_blocks < 1:
             raise ValueError("min_snapshot_blocks must be >= 1")
-        self.model, self.cfg, self.params = model, cfg, params
+        # every engine runs under a ServePlan; single-device is the
+        # trivial 1x1 plan, so there is exactly one code path
+        self.plan = plan if plan is not None else ServePlan.single_device()
+        self.model, self.cfg = model, cfg
+        self._param_sh = self.plan.param_shardings(params, param_axes)
+        self.params = jax.device_put(params, self._param_sh)
         self.state = model.state
         self.slots = slots
         self.max_len = max_len
@@ -288,6 +296,25 @@ class ServeEngine:
         self._slot_pos = jnp.zeros((slots,), jnp.int32)
         self._slot_keys = init_slot_keys(slots)
         self._slot_samp = init_slot_sampling(slots)
+
+        # placement: slot-stacked state spreads slots over "data", batch-1
+        # prefill caches shard kv-heads over "model", everything the host
+        # reads or writes per request stays replicated
+        plan_ = self.plan
+        rep = plan_.replicated()
+        cache1_sh = plan_.state_shardings(slot_cache0)
+        cacheS_sh = plan_.state_shardings(self._slot_caches,
+                                          slot_stacked=True)
+        tok_sh = plan_.slot_sharding(self._slot_tokens)
+        pos_sh = plan_.slot_sharding(self._slot_pos)
+        keys_sh = plan_.slot_sharding(self._slot_keys)
+        samp_sh = jax.tree_util.tree_map(plan_.slot_sharding,
+                                         self._slot_samp)
+        self._slot_caches = jax.device_put(self._slot_caches, cacheS_sh)
+        self._slot_tokens = jax.device_put(self._slot_tokens, tok_sh)
+        self._slot_pos = jax.device_put(self._slot_pos, pos_sh)
+        self._slot_keys = jax.device_put(self._slot_keys, keys_sh)
+        self._slot_samp = jax.device_put(self._slot_samp, samp_sh)
 
         self.prefix_cache = prefix_cache
         if prefix_cache is not None:
@@ -379,6 +406,9 @@ class ServeEngine:
             # tokens.
             logits, caches = jax.vmap(decode_one, in_axes=(None, 0, 0, 0))(
                 params, toks, pos, caches)
+            # gather the vocab dim before softmax/argmax: the reductions
+            # below must see identically-ordered operands on every mesh
+            logits = self.plan.constrain_logits(logits)
 
             def all_greedy(_):
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
@@ -413,13 +443,40 @@ class ServeEngine:
         # The slot-stacked cache is donated on both hot paths (decode tick,
         # slot install) so XLA updates it in place instead of copying the
         # full cache pytree every generated token; callers must treat the
-        # cache they pass in as consumed.
-        self._prefill = jax.jit(prefill_one)
-        self._prefill_resume = jax.jit(prefill_resume)
-        self._fresh_slot = jax.jit(fresh_slot)
-        self._restore = jax.jit(restore)
-        self._install_slot = jax.jit(install_slot, donate_argnums=(0,))
-        self._decode = jax.jit(decode_all, donate_argnums=(5,))
+        # cache they pass in as consumed. Every entry point carries the
+        # plan's explicit in/out shardings (donated args keep in == out so
+        # donation survives) and is wrapped in the plan's activation
+        # context so model-code shard_act constraints resolve against the
+        # serving rules at trace time. On the 1x1 plan every sharding is
+        # the single device and nothing changes.
+        param_sh = self._param_sh
+        wrap = plan_.wrap
+        self._prefill = wrap(jax.jit(
+            prefill_one,
+            in_shardings=(param_sh, rep), out_shardings=(rep, cache1_sh)))
+        self._prefill_resume = wrap(jax.jit(
+            prefill_resume,
+            in_shardings=(param_sh, rep, cache1_sh, rep),
+            out_shardings=(rep, cache1_sh)))
+        self._fresh_slot = wrap(jax.jit(
+            fresh_slot, in_shardings=(param_sh,), out_shardings=cache1_sh))
+        self._restore = wrap(jax.jit(
+            # snapshots arrive host-replicated (gather-on-snapshot in the
+            # prefix cache); the out sharding re-shards on restore
+            restore, in_shardings=(param_sh, rep, rep),
+            out_shardings=cache1_sh))
+        self._install_slot = wrap(jax.jit(
+            install_slot, donate_argnums=(0,),
+            in_shardings=(cacheS_sh, tok_sh, pos_sh, keys_sh, samp_sh,
+                          cache1_sh, rep, rep, rep, rep, rep, rep, rep,
+                          rep),
+            out_shardings=(cacheS_sh, tok_sh, pos_sh, keys_sh, samp_sh,
+                           rep, rep)))
+        self._decode = wrap(jax.jit(
+            decode_all, donate_argnums=(5,),
+            in_shardings=(param_sh, tok_sh, pos_sh, keys_sh, samp_sh,
+                          cacheS_sh, rep),
+            out_shardings=(rep, rep, tok_sh, pos_sh, keys_sh, cacheS_sh)))
 
         # retrace watchdog: every jitted entry point's jit-cache size is
         # sampled per tick; growth after reset_stats() (= warm-up done) is
@@ -447,7 +504,8 @@ class ServeEngine:
             min_snapshot_blocks=min_snapshot_blocks,
             budget=prefill_budget,
             resume_lens=self._resume_lens,
-            tracer=self.telemetry.tracer)
+            tracer=self.telemetry.tracer,
+            mesh_shape=self.plan.describe())
         if prefix_cache is not None:
             prefix_cache.attach_tracer(self.telemetry.tracer)
 
@@ -486,6 +544,19 @@ class ServeEngine:
             "host-observed gap between consecutive decode-tick "
             "completions within a busy streak",
             edges=self.TICK_GAP_EDGES_MS, window=16384)
+        self._m_collective = reg.histogram(
+            "serve_collective_ms",
+            "per-tick device->host token gather (the cross-device "
+            "collective + transfer cost of a sharded tick)",
+            edges=self.ITL_EDGES_MS)
+        # mesh topology exported as set-gauges (reset() zeroes them, so
+        # reset_stats re-sets; see _set_mesh_gauges)
+        self._g_mesh_devices = reg.gauge(
+            "serve_mesh_devices", "devices per mesh axis", labels=("axis",))
+        self._g_mesh_info = reg.gauge(
+            "serve_mesh_info", "serving mesh shape (constant 1, "
+            "shape in the label)", labels=("shape",))
+        self._set_mesh_gauges()
         reg.gauge("serve_slots", "decode slots", fn=lambda: float(slots))
         reg.gauge("serve_active_requests",
                   "slots with an installed decoding request",
@@ -518,6 +589,8 @@ class ServeEngine:
                         fn=lambda: pc.hit_tokens)
             reg.counter("serve_prefix_cache_evictions_total",
                         "snapshots evicted", fn=lambda: pc.evictions)
+
+        self._mesh_desc = self.plan.describe()
 
         # gap anchor: the previous tick's sync time within the current
         # busy streak; None across idle periods, so a bursty workload's
@@ -734,10 +807,17 @@ class ServeEngine:
         tr = self.telemetry.tracer
         if tr:
             tr.begin("tick", "host_sync")
+        # device->host gather of the tick's tokens: on a sharded mesh this
+        # wait covers the tick's collectives + the cross-device transfer
+        t_c0 = time.perf_counter()
+        if tr:
+            tr.begin("tick", "collective", mesh=self._mesh_desc)
         toks = np.asarray(rec.toks)
         lps = np.asarray(rec.lps) if self.logprobs else None
         now = time.perf_counter()
+        self._m_collective.observe((now - t_c0) * 1e3)
         if tr:
+            tr.end("tick")  # collective
             tr.end("tick", slots=int(rec.active.sum()))
         # NB: with a prefill budget (or overlap), admission chunk work
         # dispatched ahead of this tick executes on the same device stream
@@ -854,9 +934,15 @@ class ServeEngine:
         self._gap_anchor = None
         self._last_sync = None
         self.telemetry.reset()
+        self._set_mesh_gauges()  # reset() zeroes set-gauges
         self.scheduler.reset_stats()
         if self.prefix_cache is not None:
             self.prefix_cache.reset_stats()
+
+    def _set_mesh_gauges(self):
+        for axis, n in self.plan.axis_sizes.items():
+            self._g_mesh_devices.labels(axis=axis).set(float(n))
+        self._g_mesh_info.labels(shape=self.plan.describe()).set(1.0)
 
     # histogram bucket edges (milliseconds, final bucket open-ended);
     # registry semantics are Prometheus `le`: a value exactly on an edge
@@ -911,6 +997,11 @@ class ServeEngine:
             },
             "retraces": self.telemetry.watchdog.retraces,
             "scheduler": self.scheduler.stats(),
+            "mesh": {
+                "shape": self._mesh_desc,
+                "devices": dict(self.plan.axis_sizes),
+                "collective_ms": self._m_collective.percentiles(),
+            },
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()

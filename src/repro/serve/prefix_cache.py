@@ -433,9 +433,17 @@ class PrefixCache:
 
     def insert(self, key: bytes, n_tokens: int, snapshot):
         """Admit one snapshot under the byte budget; persist it when a
-        disk tier is configured."""
+        disk tier is configured.
+
+        Snapshots are stored HOST-side (gather-on-snapshot): a sharded
+        engine's snapshot leaves carry that mesh's placement, and the
+        stored form must be mesh-independent so a 4x2 engine's snapshot
+        restores bit-identically into a 1x1 engine (and vice versa). The
+        restore entry point re-shards on the way back in."""
         if not key:
             return
+        import numpy as np
+        snapshot = jax.tree_util.tree_map(np.asarray, snapshot)
         if self._admit(key, n_tokens, snapshot):
             self._disk_skip.pop(key, None)  # a local write beats a stale
             self._disk_write(key, n_tokens, snapshot)  # negative probe

@@ -82,7 +82,7 @@ class PrefillScheduler:
                  fresh_fn: Callable, restore_fn: Callable,
                  prefix_cache=None, min_snapshot_blocks: int = 1,
                  budget: int | None = None, resume_lens: set | None = None,
-                 tracer=None):
+                 tracer=None, mesh_shape: str = ""):
         if budget is not None and budget < 1:
             raise ValueError("prefill_budget must be >= 1 (or None)")
         self.state = state
@@ -95,6 +95,9 @@ class PrefillScheduler:
         self.min_blocks = min_snapshot_blocks
         self.budget = budget
         self.resume_lens = resume_lens if resume_lens is not None else set()
+        # mesh-shape label stamped on chunk-dispatch trace events (empty
+        # for an unplanned/legacy construction: label omitted)
+        self.mesh_shape = mesh_shape
         self.jobs: list[PrefillJob] = []
         # announced-but-unmaterialized snapshot boundaries of in-flight
         # jobs: chain key -> token position (the coalescing rendezvous)
@@ -304,7 +307,9 @@ class PrefillScheduler:
             self.chunk_tokens += cut
             if tr:
                 tr.instant(f"slot{job.slot}", "chunk", rid=job.req.rid,
-                           pos=0, end=int(cut))
+                           pos=0, end=int(cut),
+                           **({"mesh": self.mesh_shape}
+                              if self.mesh_shape else {}))
             return cut
         pos = job.part.n_tokens
         # host-side slice (free) + one h2d transfer beats two eager device
@@ -317,7 +322,9 @@ class PrefillScheduler:
         self.chunk_tokens += cut - pos
         if tr:
             tr.instant(f"slot{job.slot}", "chunk", rid=job.req.rid,
-                       pos=int(pos), end=int(cut))
+                       pos=int(pos), end=int(cut),
+                       **({"mesh": self.mesh_shape}
+                          if self.mesh_shape else {}))
         key = job.snap_at.get(cut)
         if key:
             self.pc.insert(key, cut, self.state.snapshot(state))

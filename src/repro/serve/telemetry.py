@@ -326,9 +326,11 @@ class MetricsRegistry:
 # rejects any event outside this vocabulary, so the schema below IS the
 # compatibility contract for trace consumers.
 SPAN_NAMES = frozenset({
-    # engine tick phases (track "tick")
+    # engine tick phases (track "tick"); "collective" nests inside
+    # "host_sync" and times the device->host token gather (the sharded
+    # tick's collective + transfer cost)
     "tick", "plan", "chunk_dispatch", "decode_dispatch", "host_sync",
-    "retire",
+    "collective", "retire",
     # request lifecycle (track "slot<i>")
     "prefill", "decode",
 })

@@ -123,3 +123,114 @@ print("DRYRUN_OK")
                          capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "DRYRUN_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# distributed/fault.py (host-side, no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_with_retries_backoff_then_success(monkeypatch):
+    from repro.distributed import fault
+
+    sleeps = []
+    monkeypatch.setattr(fault.time, "sleep", sleeps.append)
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise IOError("transient")
+        return "ok"
+
+    assert fault.with_retries(flaky, retries=3, backoff=0.5)() == "ok"
+    assert calls["n"] == 3
+    assert sleeps == [0.5, 1.0]  # backoff * 2**attempt
+
+
+def test_with_retries_exhaustion(monkeypatch):
+    from repro.distributed import fault
+
+    sleeps = []
+    monkeypatch.setattr(fault.time, "sleep", sleeps.append)
+    calls = {"n": 0}
+
+    def broken():
+        calls["n"] += 1
+        raise OSError("down")
+
+    with pytest.raises(OSError):
+        fault.with_retries(broken, retries=2, backoff=0.25)()
+    assert calls["n"] == 3           # initial try + 2 retries
+    assert sleeps == [0.25, 0.5]     # no sleep after the final failure
+
+
+def test_with_retries_unlisted_exception_propagates(monkeypatch):
+    from repro.distributed import fault
+
+    sleeps = []
+    monkeypatch.setattr(fault.time, "sleep", sleeps.append)
+    calls = {"n": 0}
+
+    def bug():
+        calls["n"] += 1
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        fault.with_retries(bug, retries=3)()
+    assert calls["n"] == 1 and sleeps == []
+
+
+def test_straggler_detector_flags_outlier(monkeypatch):
+    from repro.distributed import fault
+
+    clock = {"t": 0.0}
+    monkeypatch.setattr(fault.time, "perf_counter", lambda: clock["t"])
+    det = fault.StragglerDetector(window=50, z=3.0, min_steps=10)
+
+    def step(dt):
+        det.start()
+        clock["t"] += dt
+        return det.stop()
+
+    # identical steps: variance ~0, nothing flags
+    for _ in range(20):
+        assert step(0.10) is False
+    assert det.flagged == []
+    # a 2x step against a zero-variance baseline must flag
+    assert step(0.20) is True
+    assert len(det.flagged) == 1
+    flagged_step, flagged_dt = det.flagged[0]
+    assert abs(flagged_dt - 0.20) < 1e-9
+
+
+def test_straggler_detector_warmup_never_flags(monkeypatch):
+    from repro.distributed import fault
+
+    clock = {"t": 0.0}
+    monkeypatch.setattr(fault.time, "perf_counter", lambda: clock["t"])
+    det = fault.StragglerDetector(window=50, z=3.0, min_steps=10)
+    # below min_steps even a wild outlier is warm-up, not a straggler
+    for dt in (0.1, 0.1, 0.1, 5.0):
+        det.start()
+        clock["t"] += dt
+        assert det.stop() is False
+    assert det.flagged == []
+
+
+def test_preemption_guard_install_uninstall():
+    import signal
+
+    from repro.distributed import fault
+
+    prev = signal.getsignal(signal.SIGTERM)
+    guard = fault.PreemptionGuard()
+    assert guard.preempted is False
+    guard.install()
+    try:
+        assert signal.getsignal(signal.SIGTERM) is not prev
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert guard.preempted is True
+    finally:
+        guard.uninstall()
+    # the previous handler must be restored exactly
+    assert signal.getsignal(signal.SIGTERM) is prev

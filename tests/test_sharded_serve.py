@@ -1,0 +1,164 @@
+"""Mesh-aware serving: ServePlan plumbing plus the bit-parity contract.
+
+The slow tests drive a full ServeEngine (prefix cache, overlapped chunked
+admission, mixed greedy/sampled slots) in a subprocess with 8 host
+devices and assert the emitted tokens AND logprobs are bit-identical
+across mesh shapes {1x1, 2x1, 1x2, 4x2}, with zero steady-state
+retraces on every shape. Subprocesses because XLA's device count is
+locked at first jax init.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+# ---------------------------------------------------------------------------
+# fast, in-process: mesh construction and plan validation
+# ---------------------------------------------------------------------------
+
+def test_make_serving_mesh_validates():
+    from repro.launch.mesh import make_serving_mesh
+
+    with pytest.raises(ValueError, match="divisible"):
+        make_serving_mesh(6, model_parallel=4)
+    with pytest.raises(ValueError, match="n_devices >= 1"):
+        make_serving_mesh(0)
+    # the too-many-devices error must tell the user the CPU escape hatch
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_serving_mesh(4096)
+
+
+def test_single_device_plan_is_trivial():
+    import numpy as np
+
+    from repro.serve import ServePlan
+
+    plan = ServePlan.single_device()
+    assert plan.describe() == "1x1"
+    assert plan.axis_sizes == {"data": 1, "model": 1}
+    assert plan.n_devices == 1
+    # every sharding degrades to (semantically) fully replicated on 1x1
+    assert plan.slot_sharding(np.zeros((4, 1, 1))).is_equivalent_to(
+        plan.replicated(), 3)
+
+
+def test_from_mesh_rejects_foreign_axes():
+    from repro.launch.mesh import make_mesh
+    from repro.serve import ServePlan
+
+    with pytest.raises(ValueError, match="data.*model"):
+        ServePlan.from_mesh(make_mesh((1,), ("pod",)))
+
+
+def test_param_shardings_replicated_without_axes():
+    import numpy as np
+
+    from repro.serve import ServePlan
+
+    plan = ServePlan.single_device()
+    params = {"wq": np.zeros((4, 2, 2)), "norm": np.zeros((4,))}
+    sh = plan.param_shardings(params, None)
+    assert all(s.spec == plan.replicated().spec
+               for s in [sh["wq"], sh["norm"]])
+
+
+# ---------------------------------------------------------------------------
+# slow, subprocess: engine bit-parity across mesh shapes
+# ---------------------------------------------------------------------------
+
+_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.mesh import make_serving_mesh
+from repro.models import build_model
+from repro.serve import (PrefixCache, SamplingParams, ServeEngine,
+                         ServePlan)
+
+ARCH = sys.argv[1]
+cfg = get_config(ARCH, smoke=True, lt_block_size=16)
+model = build_model(cfg)
+params, axes = model.init(jax.random.PRNGKey(0))
+BLK = cfg.lt_block_size
+PROMPT = 3 * BLK + 5        # chunked admission: buckets {2*BLK, BLK, 5}
+SHARED = 2 * BLK            # block-aligned shared prefix (cache-hittable)
+GEN = 6
+rng = np.random.default_rng(11)
+shared = rng.integers(0, cfg.vocab_size, size=SHARED)
+prompts = [jnp.asarray(np.concatenate(
+               [shared, rng.integers(0, cfg.vocab_size,
+                                     size=PROMPT - SHARED)]), jnp.int32)
+           for _ in range(5)]
+
+def sampling(i):
+    # alternating greedy / sampled slots in one batch
+    if i % 2 == 0:
+        return SamplingParams()
+    return SamplingParams(temperature=0.8, top_k=12, seed=100 + i)
+
+def run(d, m):
+    mesh = make_serving_mesh(d * m, model_parallel=m)
+    plan = ServePlan.from_mesh(mesh, shard_model=True)
+    pc = PrefixCache(8 << 20)
+    eng = ServeEngine(model, cfg, params, slots=4, max_len=PROMPT + GEN + 2,
+                      prefix_cache=pc, logprobs=True, prefill_budget=BLK,
+                      overlap=True, plan=plan, param_axes=axes)
+    # warm-up compiles every trace the workload needs: submitting the
+    # same prompt twice covers the cold path (fresh_slot + every resume
+    # chunk bucket + install + decode) AND the snapshot-restore path; the
+    # reset arms the retrace watchdog so any later compile counts.
+    eng.submit(prompts[0], GEN, sampling=sampling(0))
+    eng.run()
+    eng.submit(prompts[0], GEN, sampling=sampling(1))
+    eng.run()
+    eng.reset_stats()
+    for i, p in enumerate(prompts):
+        eng.submit(p, GEN, sampling=sampling(i))
+    outs = sorted(eng.run(), key=lambda o: o.rid)
+    st = eng.stats()
+    assert st["retraces"] == 0, (d, m, st["retraces"])
+    assert st["prefix_cache"]["hits"] >= 1, (d, m, st["prefix_cache"])
+    assert st["scheduler"]["chunks"] > len(prompts), (d, m, st["scheduler"])
+    assert st["mesh"]["shape"] == f"{d}x{m}", st["mesh"]
+    toks = [o.tokens.tolist() for o in outs]
+    # uint32 bit view: logprob comparison is exact, not approximate
+    lps = [o.logprobs.view(np.uint32).tolist() for o in outs]
+    return toks, lps
+
+base = run(1, 1)
+for d, m in ((2, 1), (1, 2), (4, 2)):
+    got = run(d, m)
+    assert got[0] == base[0], (d, m, "TOKENS", base[0], got[0])
+    assert got[1] == base[1], (d, m, "LOGPROBS")
+    print(f"PARITY_OK {d}x{m}")
+print("ALL_OK")
+"""
+
+
+def _run_parity(arch):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", _PARITY_SCRIPT, arch],
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    for shape in ("2x1", "1x2", "4x2"):
+        assert f"PARITY_OK {shape}" in out.stdout, out.stdout
+    assert "ALL_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_mesh_bit_parity_polysketch():
+    _run_parity("gpt2s-polysketch")
+
+
+@pytest.mark.slow
+def test_mesh_bit_parity_recurrent():
+    _run_parity("mamba2-780m")
