@@ -1,0 +1,28 @@
+"""jaxlint: repo-aware static analysis for the serving stack's invariants.
+
+PRs 1-8 accumulated invariants that were only enforced *dynamically*
+(RetraceWatchdog, bit-parity tests, CI smokes): zero steady-state
+retraces, donated-buffer discipline, no host syncs on the tick critical
+path, mesh-independent FP reduction order. This package enforces them at
+lint time, before a single tick runs — an AST pass over ``src/`` with a
+rule registry, per-line ``# jaxlint: disable=<rule>`` pragmas, a
+committed baseline for grandfathered findings, and machine-readable
+output.
+
+Entry points::
+
+    python -m repro.analysis src/ --format json
+    scripts/jaxlint --explain host-sync-in-jit-path
+
+Rules live in :mod:`repro.analysis.rules`; the engine (file loading,
+pragma handling, baseline delta) in :mod:`repro.analysis.core`; the
+lightweight intra-package call graph both jit-reachability rules share in
+:mod:`repro.analysis.callgraph`. The analyzer is stdlib-only on purpose:
+it must run (and fail CI) even where jax cannot import.
+"""
+from repro.analysis.core import (Finding, Rule, RULES, load_baseline,
+                                 baseline_delta, rule, run_paths)
+from repro.analysis import rules as _rules  # noqa: F401  (registers rules)
+
+__all__ = ["Finding", "Rule", "RULES", "run_paths", "load_baseline",
+           "baseline_delta", "rule"]

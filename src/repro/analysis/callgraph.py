@@ -1,0 +1,387 @@
+"""Lightweight intra-project call graph and jit-binding index.
+
+This is deliberately an *over-approximation* tuned for this repo, not a
+general type-inferred call graph:
+
+  - bare names resolve through the lexical scope chain: nested defs of
+    enclosing functions, then same-module top-level defs, then
+    ``from x import y`` targets that point at project modules;
+  - ``self.m(...)`` resolves to the enclosing class's method first;
+  - any other ``obj.m(...)`` resolves by *name match* against every
+    project function called ``m`` (minus a denylist of ubiquitous
+    builtin-container method names).
+
+Over-approximating edges errs toward flagging too much, which is the
+right failure mode for a lint with per-line pragmas.
+
+Jit bindings are recognized in all the forms this repo uses::
+
+    @jax.jit                                   # decorator
+    @functools.partial(jax.jit, static_argnames=("h",))
+    self._decode = wrap(jax.jit(decode_batch, donate_argnums=(5,)))
+    f = jax.jit(g)                             # plain call binding
+
+Each binding records the resolved python function (the *traced* root),
+the donated / static argument positions and names, the name it was bound
+to (``self._decode`` -> ``_decode``), and whether the ``jax.jit`` call
+itself sits inside a loop (a retrace hazard on its own).
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+from dataclasses import dataclass, field
+
+# obj.m(...) name-matching skips these: container/str methods that would
+# wire the graph to unrelated project functions on every dict lookup.
+GENERIC_METHOD_NAMES = {
+    "get", "set", "add", "append", "extend", "insert", "remove", "pop",
+    "popitem", "clear", "update", "setdefault", "copy", "sort", "reverse",
+    "items", "keys", "values", "count", "index", "join", "split", "strip",
+    "replace", "format", "encode", "decode", "read", "write", "close",
+    "lower", "upper", "startswith", "endswith",
+}
+
+BUILTIN_NAMES = set(dir(builtins))
+
+JAX_MODULE_NAMES = {"jax"}
+FUNCTOOLS_NAMES = {"functools"}
+
+
+def scope_nodes(func_node: ast.AST):
+    """Yield nodes in a function's *immediate* scope: walk the body but
+    do not descend into nested function/lambda bodies."""
+    stack = list(ast.iter_child_nodes(func_node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+@dataclass(eq=False)
+class FuncInfo:
+    file: object                 # ParsedFile
+    node: ast.AST                # FunctionDef | AsyncFunctionDef
+    module: str
+    qualname: str                # "Cls.meth" / "outer.<locals>.inner"
+    cls: str | None
+    parent: "FuncInfo | None"
+    params: list = field(default_factory=list)
+
+    @property
+    def name(self):
+        return self.node.name
+
+    def __repr__(self):
+        return f"<func {self.module}:{self.qualname}>"
+
+
+@dataclass(eq=False)
+class JitBinding:
+    file: object
+    line: int
+    target: FuncInfo | None      # the traced python function, if resolvable
+    target_name: str | None      # spelled name of the traced fn
+    bound_name: str | None       # attribute/var the jitted callable binds to
+    donate: tuple = ()           # positional indices
+    donate_names: tuple = ()
+    static: tuple = ()
+    static_names: tuple = ()
+    in_loop: bool = False
+
+    def donated_positions(self):
+        """All donated positions as indices, mapping donate_names through
+        the target's parameter list when it resolved."""
+        pos = set(self.donate)
+        if self.target is not None:
+            for nm in self.donate_names:
+                if nm in self.target.params:
+                    pos.add(self.target.params.index(nm))
+        return sorted(pos)
+
+    def static_positions(self):
+        pos = set(self.static)
+        if self.target is not None:
+            for nm in self.static_names:
+                if nm in self.target.params:
+                    pos.add(self.target.params.index(nm))
+        return sorted(pos)
+
+    def static_param_names(self):
+        names = set(self.static_names)
+        if self.target is not None:
+            for i in self.static:
+                if isinstance(i, int) and i < len(self.target.params):
+                    names.add(self.target.params[i])
+        return names
+
+
+def _literal_tuple(node) -> tuple:
+    """Best-effort literal_eval of donate/static kwarg values -> tuple."""
+    try:
+        v = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return ()
+    if isinstance(v, (list, tuple, set)):
+        return tuple(v)
+    return (v,)
+
+
+class CallGraph:
+    def __init__(self, files):
+        self.files = files
+        self.funcs: list[FuncInfo] = []
+        self.by_node: dict[int, FuncInfo] = {}
+        self.module_defs: dict[tuple, FuncInfo] = {}     # (module, name)
+        self.methods: dict[tuple, FuncInfo] = {}         # (module, cls, name)
+        self.by_name: dict[str, list] = {}
+        self.children: dict[int, dict] = {}              # id(f) -> {name: fi}
+        self.from_imports: dict[str, dict] = {}          # path -> {local: (mod, orig)}
+        self.module_aliases: dict[str, dict] = {}        # path -> {alias: mod}
+        self.module_names: dict[str, set] = {}           # path -> top-level names
+        self.calls: dict[int, list] = {}                 # id(f) -> [ast.Call]
+        self.jit_bindings: list[JitBinding] = []
+        for pf in files:
+            self._index_file(pf)
+        for pf in files:
+            self._find_jit_bindings(pf)
+
+    # -- indexing ----------------------------------------------------------
+
+    def _index_file(self, pf):
+        fi_imports, aliases, top = {}, {}, set()
+        for node in pf.tree.body:
+            for n in ast.walk(node):
+                if isinstance(n, ast.ImportFrom) and n.module:
+                    for a in n.names:
+                        fi_imports[a.asname or a.name] = (n.module, a.name)
+                elif isinstance(n, ast.Import):
+                    for a in n.names:
+                        aliases[a.asname or a.name.split(".")[0]] = a.name
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                top.add(node.name)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        top.add(t.id)
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name):
+                top.add(node.target.id)
+        self.from_imports[pf.path] = fi_imports
+        self.module_aliases[pf.path] = aliases
+        self.module_names[pf.path] = top
+
+        def visit(node, cls, parent, prefix):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.ClassDef):
+                    visit(child, child.name, parent,
+                          f"{prefix}{child.name}.")
+                elif isinstance(child, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    a = child.args
+                    params = [p.arg for p in
+                              a.posonlyargs + a.args + a.kwonlyargs]
+                    fi = FuncInfo(file=pf, node=child, module=pf.module,
+                                  qualname=f"{prefix}{child.name}",
+                                  cls=cls, parent=parent, params=params)
+                    self.funcs.append(fi)
+                    self.by_node[id(child)] = fi
+                    self.by_name.setdefault(child.name, []).append(fi)
+                    if parent is None and cls is None:
+                        self.module_defs[(pf.module, child.name)] = fi
+                    if cls is not None and parent is None:
+                        self.methods[(pf.module, cls, child.name)] = fi
+                    if parent is not None:
+                        self.children.setdefault(id(parent), {})[
+                            child.name] = fi
+                    self.calls[id(fi)] = [
+                        n for n in scope_nodes(child)
+                        if isinstance(n, ast.Call)]
+                    visit(child, None, fi,
+                          f"{prefix}{child.name}.<locals>.")
+                else:
+                    visit(child, cls, parent, prefix)
+
+        visit(pf.tree, None, None, "")
+
+    # -- jit detection -----------------------------------------------------
+
+    def _is_jax_name(self, pf, name: str) -> bool:
+        return name in JAX_MODULE_NAMES or \
+            self.module_aliases[pf.path].get(name, "").split(".")[0] == "jax"
+
+    def is_jit_expr(self, pf, node) -> bool:
+        """Is ``node`` a reference to jax.jit (attribute or from-import)?"""
+        if isinstance(node, ast.Attribute) and node.attr == "jit" and \
+                isinstance(node.value, ast.Name) and \
+                self._is_jax_name(pf, node.value.id):
+            return True
+        if isinstance(node, ast.Name):
+            tgt = self.from_imports[pf.path].get(node.id)
+            return tgt is not None and tgt == ("jax", "jit")
+        return False
+
+    def _resolve_in_scope(self, pf, site, name):
+        """Resolve a bare name at an AST site through the lexical chain."""
+        fn = None
+        for anc in [site] + list(pf.ancestors(site)):
+            fi = self.by_node.get(id(anc))
+            if fi is not None:
+                fn = fi
+                break
+        cur = fn
+        while cur is not None:
+            hit = self.children.get(id(cur), {}).get(name)
+            if hit is not None:
+                return hit
+            cur = cur.parent
+        hit = self.module_defs.get((pf.module, name))
+        if hit is not None:
+            return hit
+        tgt = self.from_imports[pf.path].get(name)
+        if tgt is not None:
+            mod, orig = tgt
+            for (m, n), fi in self.module_defs.items():
+                if n == orig and (m == mod or m.endswith("." + mod)
+                                  or mod.endswith("." + m) or mod == m):
+                    return fi
+        return None
+
+    def _find_jit_bindings(self, pf):
+        for node in ast.walk(pf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    b = self._binding_from_decorator(pf, node, dec)
+                    if b is not None:
+                        self.jit_bindings.append(b)
+            elif isinstance(node, ast.Call) and \
+                    self.is_jit_expr(pf, node.func):
+                self.jit_bindings.append(self._binding_from_call(pf, node))
+
+    def _binding_from_decorator(self, pf, fnode, dec):
+        kw = []
+        if self.is_jit_expr(pf, dec):
+            pass
+        elif isinstance(dec, ast.Call) and self.is_jit_expr(pf, dec.func):
+            kw = dec.keywords
+        elif isinstance(dec, ast.Call) and dec.args and \
+                self.is_jit_expr(pf, dec.args[0]) and (
+                    (isinstance(dec.func, ast.Attribute)
+                     and dec.func.attr == "partial")
+                    or (isinstance(dec.func, ast.Name)
+                        and dec.func.id == "partial")):
+            kw = dec.keywords
+        else:
+            return None
+        b = JitBinding(file=pf, line=dec.lineno,
+                       target=self.by_node.get(id(fnode)),
+                       target_name=fnode.name, bound_name=fnode.name)
+        self._fill_kwargs(b, kw)
+        return b
+
+    def _binding_from_call(self, pf, call):
+        target = None
+        target_name = None
+        if call.args:
+            a0 = call.args[0]
+            if isinstance(a0, ast.Name):
+                target_name = a0.id
+                target = self._resolve_in_scope(pf, call, a0.id)
+            elif isinstance(a0, ast.Attribute):
+                target_name = a0.attr
+                cands = [f for f in self.by_name.get(a0.attr, [])]
+                target = cands[0] if len(cands) == 1 else None
+        bound = None
+        in_loop = False
+        for anc in pf.ancestors(call):
+            if isinstance(anc, (ast.For, ast.While)):
+                in_loop = True
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+            if bound is None and isinstance(anc, ast.Assign) and anc.targets:
+                t = anc.targets[0]
+                if isinstance(t, ast.Attribute):
+                    bound = t.attr
+                elif isinstance(t, ast.Name):
+                    bound = t.id
+        b = JitBinding(file=pf, line=call.lineno, target=target,
+                       target_name=target_name, bound_name=bound,
+                       in_loop=in_loop)
+        self._fill_kwargs(b, call.keywords)
+        return b
+
+    @staticmethod
+    def _fill_kwargs(b, keywords):
+        for k in keywords or []:
+            if k.arg == "donate_argnums":
+                b.donate = _literal_tuple(k.value)
+            elif k.arg == "donate_argnames":
+                b.donate_names = _literal_tuple(k.value)
+            elif k.arg == "static_argnums":
+                b.static = _literal_tuple(k.value)
+            elif k.arg == "static_argnames":
+                b.static_names = _literal_tuple(k.value)
+
+    # -- resolution + reachability ----------------------------------------
+
+    def resolve_call(self, func: FuncInfo, call: ast.Call) -> list:
+        callee = call.func
+        if isinstance(callee, ast.Name):
+            if callee.id in BUILTIN_NAMES:
+                return []
+            hit = self._resolve_in_scope(func.file, call, callee.id)
+            return [hit] if hit is not None else []
+        if isinstance(callee, ast.Attribute):
+            attr = callee.attr
+            base = callee.value
+            if isinstance(base, ast.Name):
+                if base.id == "self" and func.cls is not None:
+                    m = self.methods.get((func.module, func.cls, attr))
+                    if m is not None:
+                        return [m]
+                mod = self.module_aliases[func.file.path].get(base.id)
+                if mod is not None:
+                    hits = [fi for (mm, nn), fi in self.module_defs.items()
+                            if nn == attr and (mm == mod
+                                               or mm.endswith("." + mod)
+                                               or mod.endswith("." + mm))]
+                    if hits:
+                        return hits
+                    if mod.split(".")[0] not in ("repro",):
+                        return []   # stdlib/3p module: no project edge
+            if attr in GENERIC_METHOD_NAMES:
+                return []
+            return list(self.by_name.get(attr, []))
+        return []
+
+    def reachable(self, roots) -> dict:
+        """BFS from ``roots``; returns {FuncInfo: originating root}."""
+        seen: dict = {}
+        stack = [(r, r) for r in roots]
+        while stack:
+            f, root = stack.pop()
+            if f in seen:
+                continue
+            seen[f] = root
+            for call in self.calls.get(id(f), []):
+                for t in self.resolve_call(f, call):
+                    if t not in seen:
+                        stack.append((t, root))
+        return seen
+
+    def jit_targets(self) -> list:
+        out, seen = [], set()
+        for b in self.jit_bindings:
+            if b.target is not None and id(b.target) not in seen:
+                seen.add(id(b.target))
+                out.append(b.target)
+        return out
+
+    def hot_path_roots(self) -> list:
+        return [f for f in self.funcs if f.file.is_hot_path_def(f.node)]
+
+    def bindings_for(self, func: FuncInfo) -> list:
+        return [b for b in self.jit_bindings if b.target is func]

@@ -1,0 +1,120 @@
+"""jaxlint command line.
+
+    python -m repro.analysis src/ --format json
+    scripts/jaxlint src/ tests/
+    scripts/jaxlint --explain donation-after-use
+    scripts/jaxlint src/ --write-baseline jaxlint.baseline.json
+
+Exit status: 0 when the baseline delta is empty (no new findings AND no
+stale baseline entries), 1 otherwise, 2 on usage errors. The default
+baseline is ./jaxlint.baseline.json when it exists; pass --no-baseline
+to compare against an empty one.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import textwrap
+
+from repro.analysis.core import (RULES, BASELINE_DEFAULT, baseline_delta,
+                                 load_baseline, run_paths, save_baseline)
+
+
+def _explain(rule_id: str) -> int:
+    r = RULES.get(rule_id)
+    if r is None:
+        print(f"unknown rule: {rule_id}", file=sys.stderr)
+        print(f"known rules: {', '.join(sorted(RULES))}", file=sys.stderr)
+        return 2
+    print(f"{r.id}")
+    print("=" * len(r.id))
+    print(f"\n{textwrap.fill(r.summary, 78)}\n")
+    print(textwrap.fill(r.rationale, 78))
+    print("\nBad:\n")
+    print(textwrap.indent(r.bad_example, "    "))
+    print("\nGood:\n")
+    print(textwrap.indent(r.good_example, "    "))
+    print(f"\nSuppress a deliberate instance with a justified pragma:\n"
+          f"\n    ...  # jaxlint: disable={r.id} -- <why this is the "
+          f"design>\n")
+    return 0
+
+
+def _list_rules() -> int:
+    width = max(len(r) for r in RULES)
+    for rid in sorted(RULES):
+        print(f"{rid:<{width}}  {RULES[rid].summary}")
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="jaxlint",
+        description="repo-aware static analysis for the serving stack's "
+                    "jit/donation/host-sync/sharding invariants")
+    p.add_argument("paths", nargs="*", help="files or directories to scan")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--select", action="append", default=None,
+                   metavar="RULE", help="run only these rules (repeatable)")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help=f"baseline file (default: {BASELINE_DEFAULT} "
+                        f"when present)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore any baseline file")
+    p.add_argument("--write-baseline", default=None, metavar="FILE",
+                   help="write current findings as the new baseline and "
+                        "exit 0")
+    p.add_argument("--explain", default=None, metavar="RULE",
+                   help="print a rule's rationale and a minimal bad/good "
+                        "example")
+    p.add_argument("--list-rules", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.explain:
+        return _explain(args.explain)
+    if args.list_rules:
+        return _list_rules()
+    if not args.paths:
+        p.error("no paths given (or use --explain/--list-rules)")
+
+    try:
+        findings = run_paths(args.paths, select=args.select)
+    except KeyError as e:
+        print(e.args[0], file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        save_baseline(args.write_baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.write_baseline}")
+        return 0
+
+    baseline = [] if args.no_baseline else load_baseline(args.baseline)
+    new, stale = baseline_delta(findings, baseline)
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [f.to_dict() for f in findings],
+            "new": [f.to_dict() for f in new],
+            "stale_baseline": stale,
+            "counts": {"total": len(findings), "new": len(new),
+                       "baselined": len(findings) - len(new),
+                       "stale_baseline": len(stale)},
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        for b in stale:
+            print(f"{b['path']}:{b['line']}: stale-baseline: baselined "
+                  f"{b['rule']} finding no longer fires — remove it from "
+                  f"the baseline")
+        n_base = len(findings) - len(new)
+        tail = f" ({n_base} baselined)" if n_base else ""
+        print(f"jaxlint: {len(new)} new finding(s), {len(stale)} stale "
+              f"baseline entr(y/ies){tail}")
+
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,276 @@
+"""jaxlint engine: parsed-file project model, rule registry, pragmas,
+baseline bookkeeping.
+
+A *project* is the set of python files named on the command line, parsed
+once; every rule sees the whole project, so repo-aware rules (call-graph
+reachability, sharding-rule vocabularies collected from ``serve/plan.py``)
+come for free. Everything here is stdlib-only — the analyzer must run in
+a bare CI container where jax itself may not import.
+
+Suppression model:
+
+  - ``# jaxlint: disable=rule-a,rule-b`` on the finding's line (or the
+    line directly above it) suppresses those rules for that line. Text
+    after the rule list (``-- why``) is a justification, encouraged for
+    every pragma.
+  - ``# jaxlint: hot-path`` on (or directly above) a ``def`` line marks
+    the function as a host-side critical-path root for the
+    host-sync-in-jit-path rule's reachability walk.
+  - The committed baseline (``jaxlint.baseline.json``) grandfathers
+    findings by ``(rule, path, line)``. The delta is two-sided: new
+    findings fail, and *stale* entries (baselined findings that no longer
+    fire) fail too, so the baseline can only shrink.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import os
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+PRAGMA_RE = re.compile(
+    r"#\s*jaxlint:\s*(disable|hot-path)\b"
+    r"(?:\s*=\s*((?:[A-Za-z0-9_-]+\s*,\s*)*[A-Za-z0-9_-]+))?")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    path: str          # posix-relative to the scan invocation's cwd
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    @property
+    def key(self) -> tuple:
+        return (self.rule, self.path, self.line)
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
+               f"{self.message}"
+
+
+@dataclass
+class Rule:
+    """One registered rule: the checker plus the self-serve documentation
+    ``--explain`` prints (rationale, minimal bad/good example)."""
+    id: str
+    summary: str
+    rationale: str
+    bad_example: str
+    good_example: str
+    check: Callable  # (Project) -> Iterable[Finding]
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(id: str, *, summary: str, rationale: str, bad_example: str,
+         good_example: str):
+    """Decorator registering a checker function as a Rule."""
+    def deco(fn):
+        RULES[id] = Rule(id=id, summary=summary, rationale=rationale,
+                         bad_example=bad_example, good_example=good_example,
+                         check=fn)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# parsed files / project
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ParsedFile:
+    path: str                      # as reported in findings
+    module: str                    # best-effort dotted module name
+    tree: ast.Module
+    source: str
+    # line -> set of rule ids disabled on that line
+    disabled: dict[int, set] = field(default_factory=dict)
+    # lines carrying a "# jaxlint: hot-path" marker
+    hot_path_lines: set = field(default_factory=set)
+    _parents: dict | None = None
+
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        if self._parents is None:
+            self._parents = {}
+            for p in ast.walk(self.tree):
+                for c in ast.iter_child_nodes(p):
+                    self._parents[c] = p
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST):
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+    def suppressed(self, line: int, rule_id: str) -> bool:
+        for ln in (line, line - 1):
+            rules = self.disabled.get(ln)
+            if rules and (rule_id in rules or "all" in rules):
+                return True
+        return False
+
+    def is_hot_path_def(self, node: ast.AST) -> bool:
+        lines = {node.lineno, node.lineno - 1}
+        # decorated defs: markers may sit on/above the first decorator
+        for d in getattr(node, "decorator_list", []):
+            lines |= {d.lineno, d.lineno - 1}
+        return bool(lines & self.hot_path_lines)
+
+
+def _scan_pragmas(source: str) -> tuple[dict, set]:
+    disabled: dict[int, set] = {}
+    hot: set = set()
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = PRAGMA_RE.search(tok.string)
+            if not m:
+                continue
+            if m.group(1) == "hot-path":
+                hot.add(tok.start[0])
+                continue
+            names = {n.strip() for n in (m.group(2) or "").split(",")
+                     if n.strip()}
+            if names:
+                disabled.setdefault(tok.start[0], set()).update(names)
+    except tokenize.TokenError:
+        pass
+    return disabled, hot
+
+
+def _module_name(path: str) -> str:
+    """Dotted module path, anchored at the deepest 'src' or package dir
+    on the path; falls back to the stem (fixture files)."""
+    parts = os.path.normpath(os.path.abspath(path)).split(os.sep)
+    stem = parts[-1][:-3] if parts[-1].endswith(".py") else parts[-1]
+    comps = parts[:-1] + [stem]
+    for anchor in ("repro",):
+        if anchor in comps:
+            i = len(comps) - 1 - comps[::-1].index(anchor)
+            mod = ".".join(comps[i:])
+            return mod[:-len(".__init__")] if mod.endswith(".__init__") \
+                else mod
+    return stem
+
+
+def parse_file(path: str, display_path: str | None = None
+               ) -> ParsedFile | None:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError:
+        return None
+    disabled, hot = _scan_pragmas(source)
+    return ParsedFile(path=display_path or path, module=_module_name(path),
+                      tree=tree, source=source, disabled=disabled,
+                      hot_path_lines=hot)
+
+
+class Project:
+    """All parsed files of one analyzer run, plus shared lazy indexes."""
+
+    def __init__(self, files: list[ParsedFile]):
+        self.files = files
+        self._callgraph = None
+
+    @property
+    def callgraph(self):
+        if self._callgraph is None:
+            from repro.analysis.callgraph import CallGraph
+            self._callgraph = CallGraph(self.files)
+        return self._callgraph
+
+
+def collect_files(paths: Iterable[str]) -> list[str]:
+    out = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith(".") and d != "__pycache__")
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    out.append(os.path.join(root, name))
+    return out
+
+
+def run_paths(paths: Iterable[str], select: Iterable[str] | None = None
+              ) -> list[Finding]:
+    """Run the (selected) rules over the files under ``paths``; returns
+    unsuppressed findings sorted by (path, line, rule)."""
+    files = []
+    for fp in collect_files(paths):
+        display = os.path.relpath(fp).replace(os.sep, "/")
+        pf = parse_file(fp, display_path=display)
+        if pf is not None:
+            files.append(pf)
+    project = Project(files)
+    wanted = set(select) if select else set(RULES)
+    unknown = wanted - set(RULES)
+    if unknown:
+        raise KeyError(f"unknown rule(s): {sorted(unknown)}; "
+                       f"known: {sorted(RULES)}")
+    by_path = {pf.path: pf for pf in files}
+    findings = []
+    for rid in sorted(wanted):
+        for f in RULES[rid].check(project):
+            pf = by_path.get(f.path)
+            if pf is not None and pf.suppressed(f.line, f.rule):
+                continue
+            findings.append(f)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+BASELINE_DEFAULT = "jaxlint.baseline.json"
+
+
+def load_baseline(path: str | None) -> list[dict]:
+    if path is None:
+        path = BASELINE_DEFAULT if os.path.exists(BASELINE_DEFAULT) else None
+    if path is None:
+        return []
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    return list(data.get("findings", []))
+
+
+def save_baseline(path: str, findings: list[Finding]):
+    data = {"version": 1, "findings": [f.to_dict() for f in findings]}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def baseline_delta(findings: list[Finding], baseline: list[dict]
+                   ) -> tuple[list[Finding], list[dict]]:
+    """Two-sided delta: (new findings not in the baseline, stale baseline
+    entries that no longer fire). Both directions gate CI — the baseline
+    can only ever shrink."""
+    base_keys = {(b["rule"], b["path"], b["line"]) for b in baseline}
+    live_keys = {f.key for f in findings}
+    new = [f for f in findings if f.key not in base_keys]
+    stale = [b for b in baseline
+             if (b["rule"], b["path"], b["line"]) not in live_keys]
+    return new, stale

@@ -1,0 +1,566 @@
+"""jaxlint rules encoding this repo's serving-stack invariants.
+
+Each rule carries its own ``--explain`` documentation (rationale plus a
+minimal bad/good pair) so builders of future PRs can self-serve. Rules
+receive the whole :class:`~repro.analysis.core.Project` — repo-aware
+checks (call-graph reachability, the sharding-rule vocabulary collected
+from ``serve/plan.py`` / ``distributed/sharding.py``) need cross-file
+context.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, rule
+from repro.analysis.callgraph import scope_nodes
+
+NP_ALIASES = {"np", "numpy", "onp"}
+JNP_ALIASES = {"jnp"}
+NP_HOST_FUNCS = {"asarray", "array", "ascontiguousarray", "copyto"}
+JNP_FRESH_FUNCS = {"array", "asarray", "zeros", "ones", "arange", "full",
+                   "linspace", "eye"}
+# literal-ish first args: np.array([...]) on host-built python data is a
+# construction, not a device->host sync
+LITERALISH = (ast.List, ast.Tuple, ast.Dict, ast.Set, ast.Constant,
+              ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+
+
+def _f(pf, node, rule_id, msg, col=None):
+    return Finding(path=pf.path, line=node.lineno,
+                   col=(node.col_offset if col is None else col) + 1,
+                   rule=rule_id, message=msg)
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-jit-path
+# ---------------------------------------------------------------------------
+
+@rule(
+    "host-sync-in-jit-path",
+    summary="device->host sync (.item()/float()/np.asarray/"
+            "block_until_ready/device_get) reachable from a jitted or "
+            "hot-path function",
+    rationale=(
+        "The engine's value proposition is a stall-free tick: prefill "
+        "chunks dispatch async and the single host sync is "
+        "double-buffered one tick behind (_sync_record). Any extra "
+        "device->host transfer on a traced function or on the host-side "
+        "tick path (functions marked `# jaxlint: hot-path`, i.e. "
+        "ServeEngine.step) serializes the pipeline and — inside a traced "
+        "function — forces eager concretization that can break tracing "
+        "outright. The rule walks a lightweight intra-project call graph "
+        "from (a) every function bound through jax.jit and (b) every "
+        "hot-path-marked root, and flags .item(), float()/int() on "
+        "traced values, np.asarray/np.array on non-literal args, "
+        "block_until_ready, and jax.device_get. The post-dispatch sync "
+        "in _sync_record is deliberate: it carries a disable pragma with "
+        "a justification, which is the intended pattern for any sync "
+        "that is the design."),
+    bad_example=(
+        "# jaxlint: hot-path\n"
+        "def step(self):\n"
+        "    toks = self._decode(...)\n"
+        "    done = np.asarray(toks)        # sync inside the tick\n"
+        "    if float(self.loss):           # concretizes a traced value\n"
+        "        ..."),
+    good_example=(
+        "# jaxlint: hot-path\n"
+        "def step(self):\n"
+        "    toks = self._decode(...)       # dispatch only\n"
+        "    rec = self._pending            # last tick's handle\n"
+        "    done = np.asarray(rec)  # jaxlint: disable=host-sync-in-jit-path -- double-buffered sync, one tick behind\n"),
+)
+def check_host_sync(project):
+    cg = project.callgraph
+    traced = cg.reachable(cg.jit_targets())
+    hot = cg.reachable(cg.hot_path_roots())
+    scope = {}
+    for f, r in hot.items():
+        scope[id(f)] = (f, "hot-path", r)
+    for f, r in traced.items():
+        scope[id(f)] = (f, "traced", r)   # traced wins when in both
+
+    for f, kind, root in scope.values():
+        pf = f.file
+        via = f"reachable from {root.qualname} ({kind} root)"
+        static_names = set()
+        for b in cg.bindings_for(f):
+            static_names |= b.static_param_names()
+        for call in cg.calls.get(id(f), []):
+            fn = call.func
+            if isinstance(fn, ast.Attribute):
+                if fn.attr == "item" and not call.args:
+                    yield _f(pf, call, "host-sync-in-jit-path",
+                             f".item() forces a device->host sync; {via}")
+                elif fn.attr == "block_until_ready":
+                    yield _f(pf, call, "host-sync-in-jit-path",
+                             f"block_until_ready blocks the host; {via}")
+                elif fn.attr == "device_get" and \
+                        isinstance(fn.value, ast.Name) and \
+                        fn.value.id == "jax":
+                    yield _f(pf, call, "host-sync-in-jit-path",
+                             f"jax.device_get copies device->host; {via}")
+                elif fn.attr in NP_HOST_FUNCS and \
+                        isinstance(fn.value, ast.Name) and \
+                        fn.value.id in NP_ALIASES:
+                    if call.args and not isinstance(call.args[0], LITERALISH):
+                        yield _f(
+                            pf, call, "host-sync-in-jit-path",
+                            f"np.{fn.attr} on a (potentially device) array "
+                            f"is a device->host copy; {via}")
+            elif isinstance(fn, ast.Name) and fn.id in ("float", "int") \
+                    and kind == "traced" and len(call.args) == 1:
+                # shape/config math (int(x.shape[0]), int(math.ceil(...)),
+                # int(cfg["n"])) is static under trace and fine — flag only
+                # values that are provably array-typed: non-static params of
+                # the jit root itself, or results of jnp./jax. calls.
+                a = call.args[0]
+                is_root = bool(cg.bindings_for(f))
+                flag = False
+                if isinstance(a, ast.Call) and \
+                        isinstance(a.func, ast.Attribute) and \
+                        isinstance(a.func.value, ast.Name) and \
+                        a.func.value.id in JNP_ALIASES | {"jax", "lax"}:
+                    flag = True
+                name = None
+                if isinstance(a, ast.Name):
+                    name = a.id
+                elif isinstance(a, ast.Subscript) and \
+                        isinstance(a.value, ast.Name):
+                    name = a.value.id
+                if is_root and name is not None and name in f.params \
+                        and name not in static_names:
+                    flag = True
+                if flag:
+                    yield _f(pf, call, "host-sync-in-jit-path",
+                             f"{fn.id}() on a traced value concretizes it "
+                             f"on host; {via}")
+
+
+# ---------------------------------------------------------------------------
+# donation-after-use
+# ---------------------------------------------------------------------------
+
+@rule(
+    "donation-after-use",
+    summary="a buffer passed at a donate_argnums/donate_argnames position "
+            "is read again after the call",
+    rationale=(
+        "The engine donates the slot caches into _install_slot "
+        "(donate_argnums=(0,)) and _decode (donate_argnums=(5,)) so XLA "
+        "reuses the buffers in place — that is what keeps the steady-state "
+        "tick allocation-free. A donated buffer is *dead* after the call: "
+        "reading it again returns garbage (or errors on some backends) "
+        "and only works by accident on CPU. The rule finds call sites of "
+        "jit bindings that declare donation, and flags any donated "
+        "argument name that is loaded again later in the same function "
+        "before being rebound. The sanctioned pattern is rebinding the "
+        "name from the call's own result tuple."),
+    bad_example=(
+        "caches = self._decode(params, ..., caches)\n"
+        "stale = caches[0]            # donated buffer read after the call"),
+    good_example=(
+        "toks, caches = self._decode(params, ..., caches)\n"
+        "use(caches)                  # rebound to the call's output"),
+)
+def check_donation(project):
+    cg = project.callgraph
+    donating = [b for b in cg.jit_bindings
+                if (b.donate or b.donate_names) and b.bound_name]
+    if not donating:
+        return
+    by_name = {}
+    for b in donating:
+        by_name.setdefault(b.bound_name, []).append(b)
+
+    for f in cg.funcs:
+        pf = f.file
+        for call in cg.calls.get(id(f), []):
+            fn = call.func
+            cname = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None)
+            for b in by_name.get(cname, []):
+                donated_names = set(b.donate_names)
+                if b.target is not None:
+                    donated_names |= {
+                        b.target.params[i] for i in b.donate
+                        if isinstance(i, int) and i < len(b.target.params)}
+                donated = [(pos, call.args[pos])
+                           for pos in b.donated_positions()
+                           if isinstance(pos, int) and pos < len(call.args)]
+                donated += [(k.arg, k.value) for k in call.keywords
+                            if k.arg in donated_names]
+                for pos, arg in donated:
+                    if not isinstance(arg, ast.Name):
+                        continue
+                    line = _use_after_donation(f, call, arg.id)
+                    if line is not None:
+                        yield Finding(
+                            path=pf.path, line=line, col=1,
+                            rule="donation-after-use",
+                            message=(
+                                f"'{arg.id}' was donated to "
+                                f"{cname}() on line {call.lineno} "
+                                f"(donate position {pos!r}) and is read "
+                                f"again here — the buffer is dead after "
+                                f"the call"))
+
+
+def _use_after_donation(f, call, name):
+    """Line of the first load of ``name`` after ``call`` that precedes
+    any rebinding, else None."""
+    end = getattr(call, "end_lineno", call.lineno)
+    in_call = {id(n) for n in ast.walk(call)}
+    loads, stores = [], []
+    for n in scope_nodes(f.node):
+        if isinstance(n, ast.Name) and n.id == name and id(n) not in in_call:
+            (loads if isinstance(n.ctx, ast.Load) else stores).append(
+                n.lineno)
+    first_store = min((s for s in stores if s >= call.lineno), default=None)
+    for ln in sorted(loads):
+        if ln <= end:
+            continue
+        if first_store is not None and first_store <= ln:
+            return None
+        return ln
+    return None
+
+
+# ---------------------------------------------------------------------------
+# retrace-hazard
+# ---------------------------------------------------------------------------
+
+@rule(
+    "retrace-hazard",
+    summary="jax.jit bound inside a loop, non-hashable values at static "
+            "positions, or a jitted closure over freshly-built jnp arrays",
+    rationale=(
+        "The serving stack's contract is *zero steady-state retraces* "
+        "(RetraceWatchdog gates CI on it). Three static patterns defeat "
+        "it: (1) calling jax.jit inside a loop builds a fresh callable — "
+        "and a fresh trace cache — per iteration; (2) passing a "
+        "list/dict/set at a static_argnums/static_argnames position "
+        "raises (unhashable) or, via conversion, retraces per distinct "
+        "value; (3) a jitted function closing over a jnp array built in "
+        "the enclosing scope bakes the array into the trace as a "
+        "constant — rebinding re-embeds and retraces, and the constant "
+        "bloats the executable. Bind jit once at setup (the engine does "
+        "this in _bind), pass arrays as arguments, keep static args "
+        "hashable."),
+    bad_example=(
+        "for step in range(n):\n"
+        "    f = jax.jit(kernel)          # new trace cache every iter\n"
+        "    f(x, [1, 2])                 # list at a static position"),
+    good_example=(
+        "f = jax.jit(kernel, static_argnums=(1,))   # bound once\n"
+        "for step in range(n):\n"
+        "    f(x, (1, 2))                 # hashable static value"),
+)
+def check_retrace(project):
+    cg = project.callgraph
+    for b in cg.jit_bindings:
+        if b.in_loop:
+            yield Finding(
+                path=b.file.path, line=b.line, col=1, rule="retrace-hazard",
+                message="jax.jit called inside a loop — every iteration "
+                        "builds a fresh callable and trace cache; bind "
+                        "once outside the loop")
+        if b.target is not None and b.target.parent is not None:
+            yield from _closure_hazards(cg, b)
+
+    nonhash = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp)
+    by_name = {}
+    for b in cg.jit_bindings:
+        if b.bound_name and (b.static or b.static_names):
+            by_name.setdefault(b.bound_name, []).append(b)
+    for f in cg.funcs:
+        for call in cg.calls.get(id(f), []):
+            fn = call.func
+            cname = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None)
+            for b in by_name.get(cname, []):
+                for pos in b.static_positions():
+                    if isinstance(pos, int) and pos < len(call.args) and \
+                            isinstance(call.args[pos], nonhash):
+                        yield _f(
+                            f.file, call.args[pos], "retrace-hazard",
+                            f"non-hashable literal at static position "
+                            f"{pos} of jitted {cname}() — static argument "
+                            f"values must be hashable")
+                for k in call.keywords:
+                    if k.arg in b.static_param_names() and \
+                            isinstance(k.value, nonhash):
+                        yield _f(
+                            f.file, k.value, "retrace-hazard",
+                            f"non-hashable literal for static argument "
+                            f"'{k.arg}' of jitted {cname}()")
+
+
+def _closure_hazards(cg, b):
+    """Jitted nested def referencing names the enclosing scope binds to
+    freshly-constructed jnp arrays."""
+    f = b.target
+    pf = f.file
+    local_stores = {n.id for n in scope_nodes(f.node)
+                    if isinstance(n, ast.Name)
+                    and not isinstance(n.ctx, ast.Load)}
+    free = {n.id for n in scope_nodes(f.node)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+            and n.id not in f.params and n.id not in local_stores
+            and n.id not in cg.module_names.get(pf.path, set())
+            and n.id not in cg.from_imports.get(pf.path, {})
+            and n.id not in cg.module_aliases.get(pf.path, {})}
+    if not free:
+        return
+    seen = set()
+    cur = f.parent
+    while cur is not None:
+        for n in scope_nodes(cur.node):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                vfn = n.value.func
+                if isinstance(vfn, ast.Attribute) and \
+                        isinstance(vfn.value, ast.Name) and \
+                        vfn.value.id in JNP_ALIASES and \
+                        vfn.attr in JNP_FRESH_FUNCS:
+                    for t in n.targets:
+                        if isinstance(t, ast.Name) and t.id in free \
+                                and t.id not in seen:
+                            seen.add(t.id)
+                            yield Finding(
+                                path=pf.path, line=n.lineno, col=1,
+                                rule="retrace-hazard",
+                                message=(
+                                    f"jitted '{f.name}' closes over "
+                                    f"'{t.id}', a jnp array built in the "
+                                    f"enclosing scope — it is baked into "
+                                    f"the trace as a constant; pass it as "
+                                    f"an argument instead"))
+        cur = cur.parent
+
+
+# ---------------------------------------------------------------------------
+# pytree-carrier-dict
+# ---------------------------------------------------------------------------
+
+@rule(
+    "pytree-carrier-dict",
+    summary="plain dict literal used as a scan carry or passed into / "
+            "returned from a jitted entry point",
+    rationale=(
+        "The DecodeState protocol exists so state shapes are *typed*: "
+        "StateSpec declares dtype/shape/shard_axes per kind and "
+        "register_state wires donation + sharding. A plain dict carrier "
+        "bypasses all of that — key order silently determines pytree "
+        "structure, a typo adds a leaf instead of failing, and "
+        "shard_axes/donation cannot be attached. Use the registered "
+        "dataclasses (RecurrentCache, StateSpec kinds) or a NamedTuple "
+        "for scan carriers."),
+    bad_example=(
+        "def f(xs):\n"
+        "    init = {\"z\": z0, \"n\": 0}        # dict carry\n"
+        "    return jax.lax.scan(step, init, xs)"),
+    good_example=(
+        "class Carry(NamedTuple):\n"
+        "    z: jax.Array\n"
+        "    n: jax.Array\n"
+        "def f(xs):\n"
+        "    return jax.lax.scan(step, Carry(z0, n0), xs)"),
+)
+def check_pytree_dict(project):
+    cg = project.callgraph
+    jit_names = {b.bound_name for b in cg.jit_bindings if b.bound_name}
+    for f in cg.funcs:
+        pf = f.file
+        for call in cg.calls.get(id(f), []):
+            fn = call.func
+            is_scan = (isinstance(fn, ast.Attribute) and fn.attr == "scan")
+            if is_scan:
+                init = call.args[1] if len(call.args) > 1 else None
+                for k in call.keywords:
+                    if k.arg == "init":
+                        init = k.value
+                if isinstance(init, ast.Dict):
+                    yield _f(pf, init, "pytree-carrier-dict",
+                             "plain dict literal as a scan carry — use a "
+                             "typed carrier (NamedTuple/dataclass/"
+                             "StateSpec kind)")
+            cname = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None)
+            if cname in jit_names:
+                for a in call.args:
+                    if isinstance(a, ast.Dict):
+                        yield _f(pf, a, "pytree-carrier-dict",
+                                 f"plain dict literal passed into jitted "
+                                 f"{cname}() — structure is untyped and "
+                                 f"cannot carry shard_axes/donation")
+    for t in cg.jit_targets():
+        for n in scope_nodes(t.node):
+            if isinstance(n, ast.Return) and isinstance(n.value, ast.Dict):
+                yield _f(t.file, n.value, "pytree-carrier-dict",
+                         f"jitted '{t.name}' returns a plain dict literal "
+                         f"— use a typed carrier")
+
+
+# ---------------------------------------------------------------------------
+# sharding-rule-coverage
+# ---------------------------------------------------------------------------
+
+@rule(
+    "sharding-rule-coverage",
+    summary="logical axis names at shard_act/spec_for call sites must "
+            "resolve against the *_RULES tables; every StateSpec declares "
+            "shard_axes",
+    rationale=(
+        "spec_for looks axes up with rules.get(name, ()) — a typo'd "
+        "logical axis silently replicates the tensor instead of sharding "
+        "it, which costs memory and collective bandwidth without failing "
+        "a single test (outputs stay bit-identical by design). The rule "
+        "collects the axis vocabulary from every *_RULES dict literal in "
+        "the project (DEFAULT_RULES, SERVING_RULES, PARAM_RULES) and "
+        "flags string axis names at shard_act/spec_for call sites that "
+        "appear in no table. It also enforces the PR 8 contract that "
+        "every StateSpec(...) declares shard_axes — a kind registered "
+        "without it would fall back to replicated caches on the mesh."),
+    bad_example=(
+        "x = shard_act(x, \"batch\", \"q_head\")   # typo: not in any "
+        "*_RULES\n"
+        "register_state(StateSpec(kind=\"foo\", ...))  # no shard_axes"),
+    good_example=(
+        "x = shard_act(x, \"batch\", \"q_heads\")\n"
+        "register_state(StateSpec(kind=\"foo\", ...,\n"
+        "               shard_axes=batch_shard_axes(...)))"),
+)
+def check_sharding(project):
+    vocab = set()
+    raw = {}     # rules-table name -> (keys, starred-refs)
+    for pf in project.files:
+        for node in pf.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name) and \
+                    node.targets[0].id.endswith("_RULES") and \
+                    isinstance(node.value, ast.Dict):
+                keys, refs = set(), set()
+                for k in node.value.keys:
+                    if k is None:
+                        continue   # **merge handled via values? no: keys
+                    if isinstance(k, ast.Constant):
+                        keys.add(k.value)
+                for k, v in zip(node.value.keys, node.value.values):
+                    if k is None and isinstance(v, ast.Name):
+                        refs.add(v.id)
+                raw[node.targets[0].id] = (keys, refs)
+    for name, (keys, refs) in raw.items():
+        vocab |= keys
+        for r in refs:
+            vocab |= raw.get(r, (set(), set()))[0]
+
+    cg = project.callgraph
+    if vocab:
+        for f in cg.funcs:
+            pf = f.file
+            for call in cg.calls.get(id(f), []):
+                fn = call.func
+                cname = fn.attr if isinstance(fn, ast.Attribute) else (
+                    fn.id if isinstance(fn, ast.Name) else None)
+                if cname == "shard_act":
+                    for a in call.args[1:]:
+                        if isinstance(a, ast.Constant) and \
+                                isinstance(a.value, str) and \
+                                a.value not in vocab:
+                            yield _f(pf, a, "sharding-rule-coverage",
+                                     f"logical axis '{a.value}' resolves "
+                                     f"against no *_RULES table — it "
+                                     f"would silently replicate")
+                elif cname == "spec_for" and call.args:
+                    names = call.args[0]
+                    if isinstance(names, (ast.Tuple, ast.List)):
+                        for a in names.elts:
+                            if isinstance(a, ast.Constant) and \
+                                    isinstance(a.value, str) and \
+                                    a.value not in vocab:
+                                yield _f(pf, a, "sharding-rule-coverage",
+                                         f"logical axis '{a.value}' "
+                                         f"resolves against no *_RULES "
+                                         f"table — it would silently "
+                                         f"replicate")
+
+    # PR 8 contract: every StateSpec construction declares shard_axes
+    for f_pf in project.files:
+        for node in ast.walk(f_pf.tree):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id == "StateSpec":
+                kwargs = {k.arg for k in node.keywords}
+                if "shard_axes" not in kwargs:
+                    kind = "?"
+                    for k in node.keywords:
+                        if k.arg == "kind" and \
+                                isinstance(k.value, ast.Constant):
+                            kind = k.value.value
+                    yield _f(f_pf, node, "sharding-rule-coverage",
+                             f"StateSpec(kind={kind!r}) declares no "
+                             f"shard_axes — the kind's caches would stay "
+                             f"replicated on a mesh (PR 8 contract)")
+
+
+# ---------------------------------------------------------------------------
+# nondeterminism
+# ---------------------------------------------------------------------------
+
+@rule(
+    "nondeterminism",
+    summary="time.time() or unseeded np.random.* inside "
+            "src/repro/{core,serve,kernels,models}",
+    rationale=(
+        "The test suite locks the stack with bit-parity gates (sharded "
+        "vs single-device, resume vs cold prefill, speculative vs plain "
+        "once item 3 lands). Those gates only hold if the numeric paths "
+        "are deterministic: sampling goes through per-slot counter-based "
+        "PRNG keys, and timing goes through time.monotonic/perf_counter "
+        "in telemetry. Wall-clock time.time() in core/serve/kernels/"
+        "models smuggles nondeterminism into logic (and breaks under "
+        "clock steps); global np.random.* draws depend on import order "
+        "and thread timing. Use an explicitly seeded "
+        "np.random.default_rng(seed) (fine in launch/ workload gen) or "
+        "jax PRNG keys."),
+    bad_example=(
+        "jitter = np.random.rand()        # global, unseeded stream\n"
+        "t0 = time.time()                 # wall clock in logic"),
+    good_example=(
+        "rng = np.random.default_rng(seed)   # explicit seed\n"
+        "jitter = rng.random()\n"
+        "t0 = time.monotonic()               # interval-safe clock"),
+)
+def check_nondeterminism(project):
+    scoped_prefixes = ("repro.core", "repro.serve", "repro.kernels",
+                       "repro.models")
+    for pf in project.files:
+        mod = pf.module
+        in_scope = mod.startswith(scoped_prefixes) or \
+            not mod.startswith("repro")
+        if not in_scope:
+            continue
+        for node in ast.walk(pf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Attribute) and fn.attr == "time" and \
+                    isinstance(fn.value, ast.Name) and \
+                    fn.value.id == "time":
+                yield _f(pf, node, "nondeterminism",
+                         "time.time() is wall-clock and nondeterministic "
+                         "— use time.monotonic()/perf_counter() for "
+                         "intervals, or take timestamps as inputs")
+            elif isinstance(fn, ast.Attribute) and \
+                    isinstance(fn.value, ast.Attribute) and \
+                    fn.value.attr == "random" and \
+                    isinstance(fn.value.value, ast.Name) and \
+                    fn.value.value.id in NP_ALIASES:
+                if fn.attr in ("default_rng", "RandomState", "Generator",
+                               "SeedSequence") and node.args:
+                    continue   # explicitly seeded constructor
+                yield _f(pf, node, "nondeterminism",
+                         f"np.random.{fn.attr} draws from global/unseeded "
+                         f"state — use np.random.default_rng(seed) or a "
+                         f"jax PRNG key")

@@ -607,7 +607,11 @@ class ServeEngine:
                sampling: SamplingParams | None = None) -> int:
         """Enqueue a request; returns its id. prompt: (S,) or (1, S) int32.
         `sampling` defaults to greedy decoding."""
-        prompt = jnp.asarray(prompt, jnp.int32).reshape(-1)
+        # host-resident on purpose: the chunked scheduler slices the prompt
+        # on host and does ONE h2d per chunk — device_put here would force
+        # a d2h round-trip at admission (scheduler.start re-materializes
+        # the np view for slicing and chain keys)
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.shape[0] < 1:
             raise ValueError("prompt must contain at least one token")
         if max_new_tokens < 1:
@@ -674,11 +678,11 @@ class ServeEngine:
         req = slot.request
         now = time.perf_counter()
         out = RequestOutput(
-            rid=req.rid, tokens=np.asarray(slot.emitted, np.int32),
+            rid=req.rid, tokens=np.asarray(slot.emitted, np.int32),  # jaxlint: disable=host-sync-in-jit-path -- slot.emitted is a host python list (already synced token ints)
             prompt_len=int(req.prompt.shape[0]), finish_reason=reason,
             ttft_s=slot.ttft_s, latency_s=now - req.submit_time,
             decode_steps=len(slot.emitted) - 1,
-            logprobs=(np.asarray(slot.lps, np.float32) if self.logprobs
+            logprobs=(np.asarray(slot.lps, np.float32) if self.logprobs  # jaxlint: disable=host-sync-in-jit-path -- slot.lps is a host python list
                       else None))
         slot.request = None
         slot.prefilling = False
@@ -765,9 +769,9 @@ class ServeEngine:
             req = slot.request
             if req is None or req.rid != rid:
                 continue
-            slot.emitted.append(int(np.asarray(tok)[0]))
+            slot.emitted.append(int(np.asarray(tok)[0]))  # jaxlint: disable=host-sync-in-jit-path -- deliberate: admissions' first-token sync (one wait covers the batch)
             if self.logprobs:
-                slot.lps.append(float(np.asarray(lp)))
+                slot.lps.append(float(np.asarray(lp)))  # jaxlint: disable=host-sync-in-jit-path -- rides the first-token wait above
             slot.ttft_s = now - req.submit_time
             self._m_ttft.observe(slot.ttft_s * 1e3)
             self._m_tokens.inc()
@@ -812,8 +816,8 @@ class ServeEngine:
         t_c0 = time.perf_counter()
         if tr:
             tr.begin("tick", "collective", mesh=self._mesh_desc)
-        toks = np.asarray(rec.toks)
-        lps = np.asarray(rec.lps) if self.logprobs else None
+        toks = np.asarray(rec.toks)  # jaxlint: disable=host-sync-in-jit-path -- THE per-tick sync: double-buffered one tick behind under overlap
+        lps = np.asarray(rec.lps) if self.logprobs else None  # jaxlint: disable=host-sync-in-jit-path -- same wait as toks (dispatched together)
         now = time.perf_counter()
         self._m_collective.observe((now - t_c0) * 1e3)
         if tr:
@@ -859,6 +863,9 @@ class ServeEngine:
             # decode stall
             self._gap_anchor = None
 
+    # root of the tick critical path: jaxlint walks the call graph from
+    # here and flags any un-annotated device->host sync
+    # jaxlint: hot-path
     def step(self) -> list[RequestOutput]:
         """One engine tick.
 
@@ -886,7 +893,7 @@ class ServeEngine:
         if not self.overlap and firsts:
             # one host sync for every admission this tick (the dispatches
             # above all ran back-to-back without blocking)
-            jax.block_until_ready(firsts[-1][2])
+            jax.block_until_ready(firsts[-1][2])  # jaxlint: disable=host-sync-in-jit-path -- lockstep mode's single per-tick admission sync, by design
         if tr:
             tr.end("tick", installs=len(firsts))
         self._m_prefill_s.inc(time.perf_counter() - t0)

@@ -205,7 +205,7 @@ class PrefixCache:
         """key_d for d = 1..n_blocks over block_size-token prompt blocks."""
         import numpy as np
         blk = self.block_size
-        toks = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))  # jaxlint: disable=host-sync-in-jit-path -- tokens are host-resident prompt ints (engine.submit); hashing needs contiguous host bytes
         key = hashlib.sha256(b"psk-prefix:%d" % blk).digest()
         keys = []
         for d in range(n_blocks):

@@ -120,8 +120,9 @@ class PrefillScheduler:
 
     def start(self, req, slot: int) -> PrefillJob:
         """Enqueue one request's prefill into a reserved slot."""
-        job = PrefillJob(req=req, slot=slot,
-                         prompt_np=np.asarray(req.prompt))
+        # Request.prompt is host-resident np.int32 (engine.submit) — no
+        # d2h copy here, this is the same buffer
+        job = PrefillJob(req=req, slot=slot, prompt_np=req.prompt)
         self.started += 1
         tr = self.tracer
         if tr:

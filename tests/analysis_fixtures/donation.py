@@ -1,0 +1,30 @@
+"""jaxlint fixture: donation-after-use."""
+import jax
+
+
+def step(carry, x):
+    return carry + x, carry
+
+
+_step = jax.jit(step, donate_argnums=(0,))
+_step_named = jax.jit(step, donate_argnames=("carry",))
+
+
+def bad_use(buf, xs):
+    out, _ = _step(buf, xs)
+    return out + buf  # LINT: donation-after-use
+
+
+def bad_use_keyword(buf, xs):
+    out, _ = _step_named(carry=buf, x=xs)
+    return out + buf  # LINT: donation-after-use
+
+
+def good_rebind(buf, xs):
+    out, buf = _step(buf, xs)   # rebound from the call's own result
+    return out + buf
+
+
+def good_last_use(buf, xs):
+    out, _ = _step(buf, xs)     # donated name never read again
+    return out

@@ -1,0 +1,39 @@
+"""jaxlint fixture: host-sync-in-jit-path — traced-scope findings.
+
+Lines tagged `# LINT: <rule>` must fire exactly that rule on exactly
+that line; untagged lines are known-good and must stay silent.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def traced_root(x, y):
+    a = x.sum().item()  # LINT: host-sync-in-jit-path
+    b = float(jnp.sum(y))  # LINT: host-sync-in-jit-path
+    c = float(x)  # LINT: host-sync-in-jit-path
+    d = np.asarray(helper(y))  # LINT: host-sync-in-jit-path
+    return a + b + c + d
+
+
+def helper(y):
+    jax.block_until_ready(y)  # LINT: host-sync-in-jit-path
+    host = jax.device_get(y)  # LINT: host-sync-in-jit-path
+    return host
+
+
+@functools.partial(jax.jit, static_argnames=("h",))
+def traced_static(x, h):
+    scale = float(h)              # static arg: python int, fine
+    width = int(x.shape[0] * 2)   # shape math is static under trace
+    table = np.array([1, 2, 3])   # literal construction, no d2h copy
+    return x * scale * width + jnp.asarray(table)
+
+
+def host_only(batch):
+    # not reachable from any traced or hot-path root: plain host code
+    arr = np.asarray(batch)
+    return float(arr.sum())

@@ -1,0 +1,22 @@
+"""jaxlint fixture: host-sync-in-jit-path — hot-path-scope findings.
+
+`# jaxlint: hot-path` marks `tick` as a host-side critical-path root;
+the rule walks its call graph (including the `record` helper).
+"""
+import numpy as np
+
+
+# jaxlint: hot-path
+def tick(state):
+    toks = np.asarray(state.toks)  # LINT: host-sync-in-jit-path
+    record(state)
+    return toks
+
+
+def record(state):
+    state.lp.item()  # LINT: host-sync-in-jit-path
+
+
+def off_path(state):
+    # same constructs, but not reachable from the hot-path root: silent
+    return np.asarray(state.toks)

@@ -1,0 +1,22 @@
+"""jaxlint fixture: nondeterminism."""
+import time
+
+import numpy as np
+
+
+def jitter():
+    return np.random.rand()  # LINT: nondeterminism
+
+
+def stamp():
+    return time.time()  # LINT: nondeterminism
+
+
+def rng_unseeded():
+    return np.random.default_rng()  # LINT: nondeterminism
+
+
+def seeded_ok(seed):
+    rng = np.random.default_rng(seed)   # explicit seed: fine
+    t0 = time.monotonic()               # interval-safe clock: fine
+    return rng.random(), time.perf_counter() - t0

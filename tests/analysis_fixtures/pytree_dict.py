@@ -1,0 +1,30 @@
+"""jaxlint fixture: pytree-carrier-dict."""
+from typing import NamedTuple
+
+import jax
+
+
+def scan_step(carry, x):
+    return carry, x
+
+
+def bad_scan(xs, z0):
+    return jax.lax.scan(scan_step, {"z": z0, "n": 0}, xs)  # LINT: pytree-carrier-dict
+
+
+@jax.jit
+def traced_returns_dict(params, x):
+    return {"y": x}  # LINT: pytree-carrier-dict
+
+
+def call_with_dict_arg(x):
+    return traced_returns_dict({"w": x}, x)  # LINT: pytree-carrier-dict
+
+
+class Carry(NamedTuple):
+    z: object
+    n: object
+
+
+def good_scan(xs, z0):
+    return jax.lax.scan(scan_step, Carry(z0, 0), xs)

@@ -1,0 +1,44 @@
+"""jaxlint fixture: retrace-hazard."""
+import jax
+import jax.numpy as jnp
+
+
+def kernel(x, n):
+    return x * n
+
+
+def rebind_in_loop(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(kernel)  # LINT: retrace-hazard
+        out.append(f(x, 2))
+    return out
+
+
+_k = jax.jit(kernel, static_argnums=(1,))
+
+
+def nonhashable_static(x):
+    return _k(x, [1, 2])  # LINT: retrace-hazard
+
+
+def hashable_static(x):
+    return _k(x, (1, 2))    # tuple is hashable: fine
+
+
+def closure_over_fresh_array(dim):
+    table = jnp.arange(dim)  # LINT: retrace-hazard
+
+    def inner(x):
+        return x + table
+
+    return jax.jit(inner)
+
+
+def closure_ok(dim):
+    table = jnp.arange(dim)
+
+    def inner(x, t):
+        return x + t            # array passed as an argument: fine
+
+    return jax.jit(inner), table

@@ -1,0 +1,45 @@
+"""jaxlint fixture: sharding-rule-coverage.
+
+Carries its own miniature *_RULES tables and StateSpec/register_state
+decls so the rule's vocabulary collection and the PR 8 shard_axes
+contract can be exercised without importing the real serve/plan.py.
+"""
+DEFAULT_RULES = {None: (), "batch": ("data",), "q_heads": ("model",)}
+SERVING_RULES = {**DEFAULT_RULES, "kv_heads": ("model",)}
+
+
+def shard_act(x, *names):
+    return x
+
+
+def spec_for(names, shape):
+    return names
+
+
+class StateSpec:
+    def __init__(self, **kw):
+        pass
+
+
+def register_state(spec):
+    return spec
+
+
+def apply_ok(x):
+    return shard_act(x, "batch", "q_heads")
+
+
+def apply_typo(x):
+    return shard_act(x, "batch", "q_head")  # LINT: sharding-rule-coverage
+
+
+def spec_ok(shape):
+    return spec_for(("batch", None, "kv_heads"), shape)
+
+
+def spec_typo(shape):
+    return spec_for(("batch", "kv_head"), shape)  # LINT: sharding-rule-coverage
+
+
+GOOD_SPEC = register_state(StateSpec(kind="foo", shard_axes={"z": "data"}))
+BAD_SPEC = register_state(StateSpec(kind="bar"))  # LINT: sharding-rule-coverage

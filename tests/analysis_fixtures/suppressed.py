@@ -1,0 +1,21 @@
+"""jaxlint fixture: every pragma form must fully silence its line.
+
+This file would otherwise produce findings on four lines; the test
+asserts it produces zero.
+"""
+import time
+
+import numpy as np
+
+
+def stamp_for_logs():
+    return time.time()  # jaxlint: disable=nondeterminism -- wall-clock label for humans, not logic
+
+
+# jaxlint: hot-path
+def tick(rec):
+    toks = np.asarray(rec.toks)  # jaxlint: disable=host-sync-in-jit-path -- trailing form: the deliberate double-buffered sync
+    # jaxlint: disable=host-sync-in-jit-path -- standalone form covers the next line
+    lps = np.asarray(rec.lps)
+    both = np.asarray(rec.extras)  # jaxlint: disable=host-sync-in-jit-path,nondeterminism -- multi-rule list parses too
+    return toks, lps, both

@@ -1,0 +1,228 @@
+"""jaxlint: the analyzer analyzes the analyzer's fixtures (and the repo).
+
+Fixture contract: in tests/analysis_fixtures/, every line tagged
+`# LINT: <rule-id>` must fire exactly that rule on exactly that line,
+and nothing else in the corpus may fire at all — so false positives in
+known-good snippets fail just as loudly as false negatives in known-bad
+ones.
+"""
+import io
+import json
+import os
+import re
+import subprocess
+import sys
+import tokenize
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, run_paths, baseline_delta, load_baseline
+from repro.analysis.cli import main as cli_main
+from repro.analysis.core import _scan_pragmas, save_baseline
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "analysis_fixtures"
+MARKER = re.compile(r"#\s*LINT:\s*([a-z0-9-]+)")
+
+
+def marker_expectations():
+    """{(relpath, line, rule)} parsed from the fixture corpus."""
+    out = set()
+    for path in sorted(FIXTURES.glob("*.py")):
+        rel = os.path.relpath(path).replace(os.sep, "/")
+        src = path.read_text()
+        for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+            if tok.type == tokenize.COMMENT:
+                m = MARKER.search(tok.string)
+                if m:
+                    out.add((rel, tok.start[0], m.group(1)))
+    return out
+
+
+def fixture_findings():
+    return run_paths([str(FIXTURES)])
+
+
+# ---------------------------------------------------------------------------
+# rule firing: exact IDs + exact lines, and no unmarked findings
+# ---------------------------------------------------------------------------
+
+def test_fixture_markers_match_exactly():
+    expected = marker_expectations()
+    got = {(f.path, f.line, f.rule) for f in fixture_findings()}
+    assert expected - got == set(), \
+        f"marked lines did not fire: {sorted(expected - got)}"
+    assert got - expected == set(), \
+        f"unmarked findings (false positives): {sorted(got - expected)}"
+
+
+@pytest.mark.parametrize("rule_id", sorted(
+    ["host-sync-in-jit-path", "donation-after-use", "retrace-hazard",
+     "pytree-carrier-dict", "sharding-rule-coverage", "nondeterminism"]))
+def test_every_rule_has_a_firing_fixture(rule_id):
+    assert rule_id in RULES
+    fired = {f.rule for f in fixture_findings()}
+    assert rule_id in fired, f"{rule_id} has no firing fixture"
+
+
+def test_findings_carry_messages_and_columns():
+    for f in fixture_findings():
+        assert f.message and f.line >= 1 and f.col >= 1
+
+
+# ---------------------------------------------------------------------------
+# pragma suppression: trailing + standalone + multi-rule forms, per rule
+# ---------------------------------------------------------------------------
+
+def test_suppressed_fixture_is_silent():
+    rel = os.path.relpath(FIXTURES / "suppressed.py").replace(os.sep, "/")
+    assert [f for f in fixture_findings() if f.path == rel] == []
+
+
+@pytest.mark.parametrize("name", sorted(
+    p.name for p in FIXTURES.glob("*.py") if p.name != "suppressed.py"))
+def test_pragma_silences_every_marked_line(name, tmp_path):
+    """Appending `# jaxlint: disable=<rule>` to each marked line must
+    fully silence that fixture (proves the pragma works for EVERY rule)."""
+    src_lines = (FIXTURES / name).read_text().splitlines()
+    marked = {ln for (p, ln, r) in marker_expectations()
+              if p.endswith("/" + name)}
+    rules_at = {ln: r for (p, ln, r) in marker_expectations()
+                if p.endswith("/" + name)}
+    for ln in marked:
+        src_lines[ln - 1] += f"  # jaxlint: disable={rules_at[ln]}"
+    out = tmp_path / name
+    out.write_text("\n".join(src_lines) + "\n")
+    assert run_paths([str(out)]) == []
+
+
+def test_scan_pragmas_forms():
+    disabled, hot = _scan_pragmas(
+        "x = 1  # jaxlint: disable=rule-a,rule-b -- why\n"
+        "# jaxlint: disable=rule-c\n"
+        "# jaxlint: hot-path\n")
+    assert disabled[1] == {"rule-a", "rule-b"}
+    assert disabled[2] == {"rule-c"}
+    assert hot == {3}
+
+
+# ---------------------------------------------------------------------------
+# baseline: grandfathers findings, and stale entries are themselves errors
+# ---------------------------------------------------------------------------
+
+def test_baseline_suppresses_and_goes_stale(tmp_path):
+    findings = fixture_findings()
+    assert findings, "fixture corpus must produce findings"
+    base = tmp_path / "baseline.json"
+    save_baseline(str(base), findings)
+    loaded = load_baseline(str(base))
+    new, stale = baseline_delta(findings, loaded)
+    assert new == [] and stale == []
+    # a baselined finding that stops firing must be reported stale
+    ghost = loaded + [{"rule": "nondeterminism", "path": "gone.py",
+                       "line": 1, "col": 1, "message": "x"}]
+    new, stale = baseline_delta(findings, ghost)
+    assert new == [] and len(stale) == 1 and stale[0]["path"] == "gone.py"
+    # and a finding absent from the baseline is new
+    new, _ = baseline_delta(findings, loaded[1:])
+    assert len(new) == 1
+
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    rc = cli_main([str(FIXTURES), "--format", "json", "--no-baseline"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["counts"]["new"] == payload["counts"]["total"] > 0
+    assert payload["counts"]["stale_baseline"] == 0
+    for f in payload["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "message"}
+
+    base = tmp_path / "b.json"
+    rc = cli_main([str(FIXTURES), "--write-baseline", str(base)])
+    capsys.readouterr()
+    assert rc == 0
+    rc = cli_main([str(FIXTURES), "--baseline", str(base),
+                   "--format", "json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert payload["counts"]["new"] == 0
+    assert payload["counts"]["baselined"] == payload["counts"]["total"]
+
+    # stale-baseline gate: entries that no longer fire flip the exit code
+    data = json.loads(base.read_text())
+    data["findings"].append({"rule": "nondeterminism", "path": "gone.py",
+                             "line": 9, "col": 1, "message": "x"})
+    base.write_text(json.dumps(data))
+    rc = cli_main([str(FIXTURES), "--baseline", str(base),
+                   "--format", "json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["counts"]["stale_baseline"] == 1
+
+
+def test_cli_explain_and_list(capsys):
+    for rid, r in RULES.items():
+        assert cli_main(["--explain", rid]) == 0
+        out = capsys.readouterr().out
+        assert rid in out and "Bad:" in out and "Good:" in out
+        assert r.rationale.split()[0] in out
+    assert cli_main(["--explain", "no-such-rule"]) == 2
+    capsys.readouterr()
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in RULES:
+        assert rid in out
+
+
+def test_cli_select_unknown_rule(capsys):
+    assert cli_main([str(FIXTURES), "--select", "bogus"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# the repo itself: empty delta against an empty committed baseline
+# ---------------------------------------------------------------------------
+
+def test_repo_src_is_clean():
+    findings = run_paths([str(REPO / "src")])
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_committed_baseline_is_empty_and_fresh():
+    baseline = load_baseline(str(REPO / "jaxlint.baseline.json"))
+    assert baseline == [], "the committed baseline must stay empty — fix " \
+        "or pragma new findings instead of baselining them"
+
+
+def test_module_entry_point_runs_clean():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src/", "--format", "json"],
+        cwd=str(REPO), capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": str(REPO / "src") + os.pathsep
+             + os.environ.get("PYTHONPATH", "")})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["counts"]["new"] == 0
+    assert payload["counts"]["stale_baseline"] == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: the sharding rule's runtime counterpart — every registered
+# DecodeState kind declares shard_axes and lands in NODE_SHARD_AXES
+# ---------------------------------------------------------------------------
+
+def test_registry_shard_axes_coverage():
+    import repro.models.ssm    # registers "ssd"      # noqa: F401
+    import repro.models.rglru  # registers "rglru"    # noqa: F401
+    from repro.core.state import NODE_SHARD_AXES, REGISTRY
+
+    expected = {"polysketch", "kv_full", "poly_kv", "kv_ring", "ssd",
+                "rglru"}
+    assert expected <= set(REGISTRY), sorted(REGISTRY)
+    for kind, spec in REGISTRY.items():
+        assert spec.shard_axes is not None, \
+            f"StateSpec kind={kind!r} registered without shard_axes " \
+            f"(PR 8 contract; the jaxlint sharding-rule-coverage rule " \
+            f"enforces this statically)"
+        assert spec.node_type in NODE_SHARD_AXES, kind
