@@ -7,7 +7,9 @@ no device code — so it runs identically on CPU and TPU pods.
 """
 from __future__ import annotations
 
+import functools
 import logging
+import random
 import signal
 import time
 from collections import deque
@@ -55,7 +57,18 @@ class StragglerDetector:
         self._t0 = time.perf_counter()
 
     def stop(self) -> bool:
+        if self._t0 is None:
+            raise RuntimeError(
+                "StragglerDetector.stop() without a matching start(); call "
+                "start() at the beginning of the step being timed")
         dt = time.perf_counter() - self._t0
+        self._t0 = None
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> bool:
+        """Record one externally-timed step duration (seconds). The
+        replica coordinator times engine ticks itself (it also needs the
+        raw duration for its hang check) and feeds them here."""
         slow = False
         if len(self.durations) >= self.min_steps:
             mu = sum(self.durations) / len(self.durations)
@@ -71,8 +84,17 @@ class StragglerDetector:
 
 
 def with_retries(fn: Callable, *, retries: int = 3, backoff: float = 0.5,
-                 exceptions=(IOError, OSError)):
-    """Retry wrapper for flaky I/O (data shards, checkpoint storage)."""
+                 exceptions=(IOError, OSError), jitter: float = 0.0,
+                 on_retry: Callable | None = None):
+    """Retry wrapper for flaky I/O (data shards, checkpoint storage).
+
+    Exponential backoff `backoff * 2**attempt`, optionally stretched by a
+    uniform random factor in [1, 1+jitter] (decorrelates a fleet of
+    engines hammering one recovering store). `on_retry(attempt, exc)` is
+    called before each sleep — the telemetry layer hooks retry counters
+    here without this module importing it.
+    """
+    @functools.wraps(fn)
     def wrapped(*args, **kwargs):
         for attempt in range(retries + 1):
             try:
@@ -80,6 +102,11 @@ def with_retries(fn: Callable, *, retries: int = 3, backoff: float = 0.5,
             except exceptions as e:  # noqa: PERF203
                 if attempt == retries:
                     raise
+                if on_retry is not None:
+                    on_retry(attempt + 1, e)
                 log.warning("retry %d/%d after %s", attempt + 1, retries, e)
-                time.sleep(backoff * (2 ** attempt))
+                delay = backoff * (2 ** attempt)
+                if jitter > 0:
+                    delay *= 1.0 + random.random() * jitter
+                time.sleep(delay)
     return wrapped

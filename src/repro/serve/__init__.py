@@ -1,24 +1,33 @@
 from repro.core.state import DecodeState, PartialPrefill, bucket_chunks
-from repro.serve.engine import (GenerationResult, Request, RequestOutput,
-                                ServeEngine, generate, make_serve_fns)
+from repro.serve.chaos import (FAULT_KINDS, ChaosInjector, ChaosSpec,
+                               ReplicaKilled, parse_chaos)
+from repro.serve.engine import (GenerationResult, RecoveredRequest, Request,
+                                RequestOutput, ServeEngine, generate,
+                                make_serve_fns)
 from repro.serve.plan import PARAM_RULES, SERVING_RULES, ServePlan
 from repro.serve.prefix_cache import (PrefixCache, params_fingerprint,
                                       snapshot_nbytes)
-from repro.serve.sampling import (SamplingParams, SlotSampling, request_key,
-                                  sample_first, sample_step, sample_token)
+from repro.serve.replicas import Overloaded, ReplicaSet, replica_plans
+from repro.serve.sampling import (SamplingParams, SlotSampling, advance_key,
+                                  request_key, sample_first, sample_step,
+                                  sample_token)
 from repro.serve.scheduler import PrefillJob, PrefillScheduler
 from repro.serve.telemetry import (Counter, Gauge, Histogram, MemorySampler,
                                    MetricsRegistry, RetraceWatchdog,
                                    Telemetry, Tracer, format_event,
                                    validate_trace)
 
-__all__ = ["Counter", "DecodeState", "Gauge", "GenerationResult",
-           "Histogram", "MemorySampler", "MetricsRegistry", "PARAM_RULES",
+__all__ = ["ChaosInjector", "ChaosSpec", "Counter", "DecodeState",
+           "FAULT_KINDS", "Gauge", "GenerationResult",
+           "Histogram", "MemorySampler", "MetricsRegistry", "Overloaded",
+           "PARAM_RULES",
            "PartialPrefill", "PrefillJob", "PrefillScheduler", "PrefixCache",
+           "RecoveredRequest", "ReplicaKilled", "ReplicaSet",
            "Request", "RequestOutput", "RetraceWatchdog", "SERVING_RULES",
            "SamplingParams", "ServeEngine", "ServePlan", "SlotSampling",
            "Telemetry", "Tracer",
-           "bucket_chunks", "format_event", "generate", "make_serve_fns",
-           "params_fingerprint", "request_key", "sample_first",
+           "advance_key", "bucket_chunks", "format_event", "generate",
+           "make_serve_fns", "params_fingerprint", "parse_chaos",
+           "replica_plans", "request_key", "sample_first",
            "sample_step", "sample_token", "snapshot_nbytes",
            "validate_trace"]

@@ -53,6 +53,7 @@ functions the dry-run lowers for prefill_* / decode_* / long_* shape cells
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -62,11 +63,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.state import bucket_chunks
 from repro.serve.plan import ServePlan
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.sampling import (SamplingParams, device_scalars,
-                                  init_slot_keys, init_slot_sampling,
-                                  request_key, sample_first, sample_step)
+from repro.serve.sampling import (SamplingParams, advance_key,
+                                  device_scalars, init_slot_keys,
+                                  init_slot_sampling, request_key,
+                                  sample_first, sample_step)
 from repro.serve.scheduler import PrefillScheduler
 from repro.serve.telemetry import Telemetry
 
@@ -174,6 +177,26 @@ class RequestOutput:
 
 
 @dataclass
+class RecoveredRequest:
+    """Host-side record of an in-flight request being re-homed after its
+    replica died (serve/replicas.py builds these from its mirror — the
+    token stream a front-end had already observed). `snapshot` is the
+    deepest usable decode-state checkpoint; recovery is correct with
+    snapshot=None too (cold prompt prefill + full token replay), a
+    checkpoint only shortens the replay."""
+    prompt: np.ndarray
+    emitted: list[int]
+    lps: list[float]
+    max_new_tokens: int
+    eos_id: int | None
+    sampling: SamplingParams
+    submit_time: float
+    ttft_s: float = 0.0
+    snapshot: object = None
+    snap_tokens: int = 0
+
+
+@dataclass
 class _Slot:
     request: Request | None = None
     prefilling: bool = False     # reserved: prefill in flight, not decoding
@@ -181,6 +204,9 @@ class _Slot:
     lps: list[float] = field(default_factory=list)
     ttft_s: float = 0.0
     last_tok_s: float | None = None  # inter-token latency tracking
+    pos0: int = 0                # device pos at install (prompt len, or the
+                                 # rebuilt position after a failover)
+    ticks: int = 0               # decode ticks dispatched since install
 
     @property
     def free(self) -> bool:
@@ -278,6 +304,10 @@ class ServeEngine:
         self.logprobs = logprobs
         self.overlap = overlap
         self.queue: deque[Request] = deque()
+        # failover re-admissions waiting for a free slot; drained ahead of
+        # the ordinary queue (a recovered request already has latency debt)
+        self._recover_pending: deque[tuple[Request, RecoveredRequest]] = \
+            deque()
         self.finished: list[RequestOutput] = []
         self._next_rid = 0
         self._slots = [_Slot() for _ in range(slots)]
@@ -339,6 +369,8 @@ class ServeEngine:
         # distinct resumed-chunk lengths ever compiled (bounded by the
         # power-of-two bucketing; asserted in tests)
         self._resume_lens: set[int] = set()
+        # distinct replay-chunk lengths (failover recovery; power-of-two)
+        self._replay_lens: set[int] = set()
 
         def prefill_one(params, tokens):
             # tokens: (1, S) at the request's own length — no padding enters
@@ -440,6 +472,46 @@ class ServeEngine:
             new_pos = jnp.where(active, pos + 1, pos)
             return out, lps, new_toks, new_pos, new_keys, caches
 
+        def replay_tokens(params, tokens, pos0, cache):
+            # decode-path REPLAY of already-emitted tokens (failover
+            # recovery): prefill and decode produce numerically different
+            # states (different matmul shapes => different f32 reduction
+            # orders), so tokens a client already observed must be
+            # re-absorbed through the same decode_step the dead replica
+            # ran, or the recovered stream would diverge from the
+            # fault-free one. One scan iteration per token; callers bucket
+            # chunk lengths to powers of two so the trace count stays
+            # O(log max_new_tokens). Logits are discarded — the tokens are
+            # known. NOT donated: `cache` may come straight out of a
+            # restored checkpoint.
+            def body(carry, tok):
+                pos, cache = carry
+                _, cache = state.decode_step(params, tok[None, None], pos,
+                                             cache)
+                return (pos + 1, cache), None
+            (_, cache), _ = jax.lax.scan(
+                body, (jnp.asarray(pos0, jnp.int32), cache), tokens[0])
+            return cache
+
+        def install_restored(caches, toks, pos, keys, samp, cache, si, tok,
+                             pos_val, key, t, k, p, g):
+            # recovery install: like install_slot but the feed token and
+            # PRNG key are GIVEN (the last mirrored token and the stream
+            # key advanced past every emitted token) instead of sampled
+            # from prefill logits — the recovered request resumes
+            # mid-stream, bit-exactly where the dead replica left off.
+            caches = state.slot_scatter(caches, cache, si)
+            toks = jax.lax.dynamic_update_index_in_dim(
+                toks, tok[:, None], si, axis=0)
+            pos = jax.lax.dynamic_update_index_in_dim(pos, pos_val, si,
+                                                      axis=0)
+            keys = jax.lax.dynamic_update_index_in_dim(keys, key, si, axis=0)
+            samp = jax.tree_util.tree_map(
+                lambda full, v: jax.lax.dynamic_update_index_in_dim(
+                    full, v.astype(full.dtype), si, axis=0),
+                samp, type(samp)(t, k, p, g))
+            return caches, toks, pos, keys, samp
+
         # The slot-stacked cache is donated on both hot paths (decode tick,
         # slot install) so XLA updates it in place instead of copying the
         # full cache pytree every generated token; callers must treat the
@@ -477,6 +549,16 @@ class ServeEngine:
             in_shardings=(param_sh, tok_sh, pos_sh, keys_sh, samp_sh,
                           cacheS_sh, rep),
             out_shardings=(rep, rep, tok_sh, pos_sh, keys_sh, cacheS_sh)))
+        self._replay = wrap(jax.jit(
+            replay_tokens,
+            in_shardings=(param_sh, rep, rep, cache1_sh),
+            out_shardings=cache1_sh))
+        self._install_restored = wrap(jax.jit(
+            install_restored, donate_argnums=(0,),
+            in_shardings=(cacheS_sh, tok_sh, pos_sh, keys_sh, samp_sh,
+                          cache1_sh, rep, rep, rep, rep, rep, rep, rep,
+                          rep),
+            out_shardings=(cacheS_sh, tok_sh, pos_sh, keys_sh, samp_sh)))
 
         # retrace watchdog: every jitted entry point's jit-cache size is
         # sampled per tick; growth after reset_stats() (= warm-up done) is
@@ -486,7 +568,9 @@ class ServeEngine:
                            ("fresh_slot", self._fresh_slot),
                            ("restore", self._restore),
                            ("install_slot", self._install_slot),
-                           ("decode", self._decode)):
+                           ("decode", self._decode),
+                           ("replay", self._replay),
+                           ("install_restored", self._install_restored)):
             self.telemetry.watchdog.register(_name, _fn)
 
         # the chunked admission scheduler drives the jitted prefill fns;
@@ -528,6 +612,9 @@ class ServeEngine:
         self._m_finished = reg.counter(
             "serve_requests_finished_total",
             "retired requests by finish reason", labels=("reason",))
+        self._m_recovered = reg.counter(
+            "serve_recovered_slots_total",
+            "requests re-installed mid-stream after a replica failover")
         self._m_prefill_s = reg.counter(
             "serve_prefill_seconds_total",
             "admission dispatch + lockstep first-token sync wall time")
@@ -589,6 +676,9 @@ class ServeEngine:
                         fn=lambda: pc.hit_tokens)
             reg.counter("serve_prefix_cache_evictions_total",
                         "snapshots evicted", fn=lambda: pc.evictions)
+            reg.counter("serve_prefix_disk_corrupt_total",
+                        "disk-tier snapshots quarantined as corrupt",
+                        fn=lambda: pc.disk_corrupt)
 
         self._mesh_desc = self.plan.describe()
 
@@ -641,7 +731,8 @@ class ServeEngine:
 
     @property
     def busy(self) -> bool:
-        return (bool(self.queue) or self.scheduler.active
+        return (bool(self.queue) or bool(self._recover_pending)
+                or self.scheduler.active
                 or self.n_active > 0 or self._pending is not None)
 
     # legacy accounting attributes, now views over the telemetry registry
@@ -689,6 +780,8 @@ class ServeEngine:
         slot.emitted = []
         slot.lps = []
         slot.last_tok_s = None
+        slot.pos0 = 0
+        slot.ticks = 0
         self.finished.append(out)
         self._m_finished.labels(reason=reason).inc()
         tr = self.telemetry.tracer
@@ -713,9 +806,13 @@ class ServeEngine:
         snapshot restore is dispatched here; chunks flow from
         scheduler.tick() under the per-tick budget."""
         for si, slot in enumerate(self._slots):
-            if not self.queue:
+            if not (self.queue or self._recover_pending):
                 break
             if not slot.free:
+                continue
+            if self._recover_pending:
+                req, rec = self._recover_pending.popleft()
+                self._install_recovery(si, req, rec)
                 continue
             req = self.queue.popleft()
             slot.request = req
@@ -740,6 +837,8 @@ class ServeEngine:
             jnp.asarray(req.prompt.shape[0], jnp.int32),
             *device_scalars(req.sampling))
         self._slots[si].prefilling = False
+        self._slots[si].pos0 = int(req.prompt.shape[0])
+        self._slots[si].ticks = 0
         self._m_prefills.inc()
         if not req.sampling.is_greedy:
             self._m_sampled.inc()
@@ -749,6 +848,257 @@ class ServeEngine:
             tr.begin(f"slot{si}", "decode", rid=req.rid,
                      prompt_len=int(req.prompt.shape[0]))
         return (si, req.rid, tok, lp)
+
+    # ------------------------------------------------------------------
+    # failover: checkpoint export, recovered admission, cancellation
+    # ------------------------------------------------------------------
+
+    def slot_covered(self, si: int) -> int:
+        """Stream tokens (prompt + absorbed emitted) the slot's device
+        state covers right now. Pure host arithmetic — no device sync."""
+        slot = self._slots[si]
+        return slot.pos0 + slot.ticks
+
+    def snapshot_slot(self, si: int):
+        """Slot si's decode state as ``(snapshot, n_tokens)``, or None when
+        the slot is not checkpointable right now (free, mid-prefill, a
+        state family with no constant-size snapshot, or off the block
+        grid). The gather/snapshot is dispatched asynchronously — it is
+        enqueued on the device stream BEFORE the next tick's donating
+        dispatch, so it reads the pre-donation buffers; host
+        materialization happens later, in PrefixCache.put_ckpt."""
+        slot = self._slots[si]
+        if not slot.decoding:
+            return None
+        state = self.state
+        if state.snapshot_granularity is None:
+            return None
+        covered = slot.pos0 + slot.ticks
+        if covered <= 0 or covered % state.block_size != 0:
+            return None
+        snap = state.snapshot(state.slot_gather(self._slot_caches, si))
+        return snap, covered
+
+    def live_requests(self) -> list[dict]:
+        """Host-side view of every request the engine still owes tokens:
+        queued, pending recovery, mid-prefill, and decoding. The mirror
+        fields (`emitted`/`lps`) are plain host lists — already-synced
+        token ints, no device wait. This is what a coordinator checkpoints
+        and what a SIGTERM drain persists."""
+        out = []
+        for req in self.queue:
+            out.append(dict(rid=req.rid, phase="queued", request=req,
+                            emitted=[], lps=[], ttft_s=0.0))
+        for req, rec in self._recover_pending:
+            out.append(dict(rid=req.rid, phase="queued", request=req,
+                            emitted=list(rec.emitted), lps=list(rec.lps),
+                            ttft_s=rec.ttft_s))
+        for si, slot in enumerate(self._slots):
+            if slot.free:
+                continue
+            out.append(dict(
+                rid=slot.request.rid,
+                phase="prefill" if slot.prefilling else "decode",
+                request=slot.request, emitted=list(slot.emitted),
+                lps=list(slot.lps), ttft_s=slot.ttft_s))
+        return out
+
+    def admit_recovered(self, rec: RecoveredRequest) -> int:
+        """Re-home a request recovered from a dead replica. Installs into
+        a free slot immediately when one exists, else parks it ahead of
+        the ordinary queue. Returns the request's NEW rid on this engine
+        (the coordinator maps it back to the global id)."""
+        prompt = np.asarray(rec.prompt, np.int32).reshape(-1)
+        if prompt.shape[0] + rec.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"recovered prompt({prompt.shape[0]}) + "
+                f"max_new({rec.max_new_tokens}) exceeds engine "
+                f"max_len={self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, prompt, rec.max_new_tokens, rec.eos_id,
+                      rec.submit_time, rec.sampling)
+        for si, slot in enumerate(self._slots):
+            if slot.free:
+                self._install_recovery(si, req, rec)
+                return rid
+        self._recover_pending.append((req, rec))
+        return rid
+
+    def _install_recovery(self, si: int, req: Request,
+                          rec: RecoveredRequest):
+        """Rebuild a recovered request's device state in slot `si` so its
+        remaining tokens come out bit-identical to the fault-free run.
+
+        The stream the dead replica absorbed is prompt ++ emitted; the
+        last emitted token was sampled but NOT yet absorbed (it is the
+        next feed). So the rebuilt cache must cover
+        ``target = prompt_len + k - 1`` tokens (k = len(emitted)):
+        restore the deepest usable checkpoint (block-aligned, <= target),
+        prefill any uncovered PROMPT tokens through the resumable prefill
+        path, then REPLAY the emitted tokens through the decode path —
+        prefill and decode are not bitwise-interchangeable, and the
+        original run absorbed emitted tokens via decode_step. Finally the
+        slot is installed with feed = emitted[-1] at pos = target and the
+        request's PRNG key advanced past all k sampled tokens."""
+        slot = self._slots[si]
+        k = len(rec.emitted)
+        if k == 0:
+            # nothing emitted yet: an ordinary admission (the chunked
+            # scheduler path, prefix cache and all)
+            slot.request = req
+            slot.prefilling = True
+            self.scheduler.start(req, si)
+            self._m_recovered.inc()
+            return
+        state = self.state
+        prompt = req.prompt
+        s0 = int(prompt.shape[0])
+        target = s0 + k - 1
+        ctx = np.concatenate([prompt,  # host list of ints, no d2h here
+                              np.asarray(rec.emitted[:-1], np.int32)])  # jaxlint: disable=host-sync-in-jit-path -- emitted tokens are host ints (the coordinator's mirror), not device arrays
+        blk = state.block_size
+        pos = 0
+        cache = None
+        if (rec.snapshot is not None and state.resumable
+                and 0 < rec.snap_tokens <= target
+                and rec.snap_tokens % blk == 0):
+            cache = self._restore(self.params, rec.snapshot,
+                                  jnp.asarray(rec.snap_tokens, jnp.int32))
+            pos = rec.snap_tokens
+        if pos < s0:
+            if pos == 0 or not state.resumable:
+                # whole prompt at its own length — the same trace ordinary
+                # admission warmed
+                _, cache = self._prefill(
+                    self.params, jnp.asarray(prompt[None, :], jnp.int32))
+                pos = s0
+            else:
+                for cut in bucket_chunks(pos, s0, blk,
+                                         self.scheduler.max_chunk_blocks):
+                    chunk = jnp.asarray(ctx[None, pos:cut], jnp.int32)
+                    self._resume_lens.add(cut - pos)
+                    _, cache = self._prefill_resume(
+                        self.params, chunk, cache,
+                        jnp.asarray(pos, jnp.int32))
+                    pos = cut
+        # decode-path replay of emitted tokens, power-of-two chunked so
+        # the compiled-trace count stays O(log max_new_tokens)
+        if pos < target:
+            for cut in bucket_chunks(pos, target, 1, None):
+                seg = jnp.asarray(ctx[None, pos:cut], jnp.int32)
+                self._replay_lens.add(cut - pos)
+                cache = self._replay(self.params, seg,
+                                     jnp.asarray(pos, jnp.int32), cache)
+                pos = cut
+        key = advance_key(request_key(req.sampling.seed),
+                          jnp.asarray(k, jnp.int32))
+        feed = jnp.asarray([rec.emitted[-1]], jnp.int32)
+        (self._slot_caches, self._slot_tokens, self._slot_pos,
+         self._slot_keys, self._slot_samp) = self._install_restored(
+            self._slot_caches, self._slot_tokens, self._slot_pos,
+            self._slot_keys, self._slot_samp, cache,
+            jnp.asarray(si, jnp.int32), feed,
+            jnp.asarray(target, jnp.int32), key,
+            *device_scalars(req.sampling))
+        slot.request = req
+        slot.prefilling = False
+        slot.emitted = list(rec.emitted)
+        slot.lps = list(rec.lps)
+        slot.ttft_s = rec.ttft_s
+        slot.last_tok_s = None
+        slot.pos0 = target
+        slot.ticks = 0
+        self._m_recovered.inc()
+        if not req.sampling.is_greedy:
+            self._m_sampled.inc()
+        tr = self.telemetry.tracer
+        if tr:
+            tr.begin(f"slot{si}", "decode", rid=req.rid, recovered=True,
+                     prompt_len=s0, replayed=k - 1,
+                     from_ckpt=int(rec.snap_tokens))
+        # recovery legitimately compiles fresh traces (replay lengths,
+        # install_restored); re-arm the steady-state baseline so they are
+        # not flagged as mid-serve retraces while real retraces on the
+        # survivors' hot path still are
+        wd = self.telemetry.watchdog
+        if wd.steady:
+            wd.mark_steady()
+
+    def drain_checkpoints(self, *, tag_ns: bytes = b"psk-drain",
+                          flush: bool = True) -> list[str]:
+        """Graceful-shutdown persistence (the SIGTERM path): stop
+        admissions, then run AT MOST one block of extra decode ticks so
+        every live slot crosses a snapshot boundary, checkpointing each
+        into the prefix cache's failover side-store as it aligns, and
+        flush the store to the disk tier. Block-granularity states can
+        only snapshot ON the grid, so "finish the current step, then
+        checkpoint" necessarily means finishing out the current block.
+        Returns the disk paths written ([] without a cache/save_dir)."""
+        pc = self.prefix_cache
+        if pc is None or self.state.snapshot_granularity is None:
+            return []
+        self.queue.clear()  # admissions stop; queued prompts are dropped
+        done: set[int] = set()
+
+        def sweep():
+            for si, slot in enumerate(self._slots):
+                if not slot.decoding or slot.request.rid in done:
+                    continue
+                got = self.snapshot_slot(si)
+                if got is None:
+                    continue
+                tag = hashlib.sha256(
+                    tag_ns + b":%d" % slot.request.rid).digest()
+                pc.put_ckpt(tag, got[1], got[0])
+                done.add(slot.request.rid)
+
+        sweep()
+        for _ in range(self.state.block_size):
+            if all(not s.decoding or s.request.rid in done
+                   for s in self._slots):
+                break
+            self.step()
+            sweep()
+        if flush and pc.save_dir is not None:
+            return pc.flush_ckpts_to_disk()
+        return []
+
+    def cancel(self, rid: int):
+        """Withdraw a request that has not yet produced a token: queued,
+        pending recovery, or mid-prefill (its slot is freed and in-flight
+        chunk work dropped; parked followers replan). A request that has
+        emitted tokens is not cancellable here — let it retire. Returns
+        the withdrawn Request, or None if rid is unknown/decoding."""
+        tr = self.telemetry.tracer
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                if tr:
+                    tr.instant("queue", "cancel", rid=rid)
+                return req
+        for i, (req, _rec) in enumerate(self._recover_pending):
+            if req.rid == rid:
+                del self._recover_pending[i]
+                if tr:
+                    tr.instant("queue", "cancel", rid=rid)
+                return req
+        for si, slot in enumerate(self._slots):
+            if (slot.request is not None and slot.request.rid == rid
+                    and slot.prefilling):
+                job = next((j for j in self.scheduler.jobs
+                            if j.slot == si), None)
+                if job is not None:
+                    self.scheduler.drop(job)
+                req = slot.request
+                slot.request = None
+                slot.prefilling = False
+                slot.emitted = []
+                slot.lps = []
+                slot.pos0 = 0
+                slot.ticks = 0
+                return req
+        return None
 
     def _note_token(self, slot: _Slot, now: float) -> float | None:
         """Returns this token's inter-token latency in ms (None for a
@@ -800,6 +1150,13 @@ class ServeEngine:
             self.params, self._slot_tokens, self._slot_pos, self._slot_keys,
             self._slot_samp, self._slot_caches, jnp.asarray(active))
         self._m_ticks.inc()
+        # ticks counts DISPATCHED decode steps per occupancy: the device
+        # cache absorbs each slot's feed token at dispatch, so
+        # pos0 + ticks is the number of stream tokens the device state
+        # covers right now — the checkpoint depth snapshot_slot reports
+        for si, slot in enumerate(self._slots):
+            if active[si]:
+                slot.ticks += 1
         return _TickRecord(toks, lps, active, rids, firsts, t0)
 
     def _sync_record(self, rec: _TickRecord, done):
@@ -981,6 +1338,7 @@ class ServeEngine:
             "generated_tokens": gen_tokens,
             "prefills": int(self._m_prefills.value),
             "sampled_requests": int(self._m_sampled.value),
+            "recovered": int(self._m_recovered.value),
             "decode_steps": int(self._m_ticks.value),
             "prefill_s": self._m_prefill_s.value,
             "decode_s": decode_s,

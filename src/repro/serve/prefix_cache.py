@@ -59,6 +59,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.fault import with_retries
+
 
 def snapshot_nbytes(snapshot) -> int:
     return sum(int(x.size * x.dtype.itemsize)
@@ -152,12 +154,30 @@ class PrefixCache:
         # disk keys that failed to load (corrupt file) or to admit
         # (over-budget snapshot): never re-read them on later lookups
         self._disk_skip: OrderedDict[bytes, None] = OrderedDict()
+        # decode-state checkpoints (replica failover): tag -> up to two
+        # (n_tokens, serialized bytes) pairs, deepest last. A separate
+        # keyspace on purpose — see put_ckpt.
+        self._ckpts: dict[bytes, list[tuple[int, bytes]]] = {}
+        self.ckpt_bytes = 0
         self.bytes = 0
         self.lookups = self.hits = self.misses = 0
         self.hit_tokens = 0
         self.inserts = self.evictions = 0
         self.disk_loads = self.disk_writes = 0
+        self.disk_corrupt = self.disk_retries = 0
+        self.ckpt_puts = self.ckpt_hits = self.ckpt_misses = 0
+        self.ckpt_drops = self.ckpt_corrupt = 0
         self._tracer = None  # serve.telemetry.Tracer, engine-attached
+        # transient-fault injection hook (serve.chaos): called with the op
+        # name at the top of every raw disk read/write attempt; raising
+        # OSError simulates a flaky store. Sits INSIDE the retry wrapper,
+        # so with_retries absorbs transient faults and only a persistent
+        # one degrades to a miss.
+        self.io_fault = None
+        retry_kw = dict(retries=2, backoff=0.02,
+                        on_retry=self._note_disk_retry)
+        self._read_retry = with_retries(self._raw_read, **retry_kw)
+        self._write_retry = with_retries(self._raw_write, **retry_kw)
 
     def attach_tracer(self, tracer):
         """Attach a serve-telemetry tracer: store internals (evictions,
@@ -242,17 +262,53 @@ class PrefixCache:
         return os.path.join(self.save_dir, self._params_fp.hex()[:16],
                             key.hex() + ".npz")
 
+    def _note_disk_retry(self, attempt: int, exc: Exception):
+        self.disk_retries += 1
+
+    def _raw_read(self, path: str) -> bytes:
+        if self.io_fault is not None:
+            self.io_fault("read")
+        with open(path, "rb") as f:
+            return f.read()
+
+    def _raw_write(self, path: str, tmp: str, data: bytes):
+        if self.io_fault is not None:
+            self.io_fault("write")
+        try:
+            with open(tmp, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def _quarantine(self, path: str):
+        """Rename an unreadable snapshot file out of the store (`.bad`
+        suffix) so no other engine pays its deserialize cost, keep the
+        bytes for a post-mortem, and count it. Corruption is a MISS, not
+        a crash: the serving loop re-prefills and re-persists."""
+        self.disk_corrupt += 1
+        try:
+            os.replace(path, path + ".bad")
+        except OSError:
+            pass
+        if self._tracer:
+            self._tracer.instant("cache", "disk_corrupt",
+                                 path=os.path.basename(path))
+
     def _disk_probe(self, key: bytes) -> bool:
         """Lazily pull a persisted snapshot into the memory tier.
 
         Returns True iff the key is now a usable in-memory entry. Every
-        non-loadable outcome — missing file, unreadable file (a crashed
-        concurrent writer, bit rot), snapshot that cannot fit the byte
-        budget — is remembered in a bounded skip-set so no lookup pays
-        that probe's syscalls/I-O twice. Negative caching means entries
-        persisted by ANOTHER engine after this one probed the key are
-        not picked up until the skip-set churns; a local insert of the
-        key clears its negative entry (see insert())."""
+        non-loadable outcome — missing file, persistently unreadable
+        file, corrupt/truncated payload (quarantined as `.bad`), snapshot
+        that cannot fit the byte budget — is remembered in a bounded
+        skip-set so no lookup pays that probe's syscalls/I-O twice.
+        Transient read errors are retried (with_retries) before the probe
+        degrades to a miss. Negative caching means entries persisted by
+        ANOTHER engine after this one probed the key are not picked up
+        until the skip-set churns; a local insert of the key clears its
+        negative entry (see insert())."""
         if key in self._disk_skip:
             return False
         path = self._disk_path(key)
@@ -260,9 +316,17 @@ class PrefixCache:
             self._mark_disk_skip(key)
             return False
         try:
-            with open(path, "rb") as f:
-                snapshot, n_tokens = self._deserialize(f.read())
+            data = self._read_retry(path)
+        except OSError:
+            # persistent I/O failure: the file may be fine but the path to
+            # it is not — skip, do not quarantine
+            self._mark_disk_skip(key)
+            return False
+        try:
+            snapshot, n_tokens = self._deserialize(data)
         except Exception:
+            # the bytes themselves are bad (truncated write, bit rot)
+            self._quarantine(path)
             self._mark_disk_skip(key)
             return False
         if self._admit(key, n_tokens, snapshot):
@@ -282,8 +346,8 @@ class PrefixCache:
 
     def _disk_write(self, key: bytes, n_tokens: int, snapshot):
         """Best-effort persistence: a full/read-only filesystem must never
-        abort the serving loop, so all I/O errors are swallowed (the
-        memory tier already holds the entry)."""
+        abort the serving loop, so I/O errors are retried (with_retries)
+        and then swallowed (the memory tier already holds the entry)."""
         if not self._disk_ready or self._serialize is None:
             return
         path = self._disk_path(key)
@@ -295,13 +359,7 @@ class PrefixCache:
             if os.path.exists(path):
                 return
             os.makedirs(os.path.dirname(path), exist_ok=True)
-            try:
-                with open(tmp, "wb") as f:
-                    f.write(self._serialize(snapshot, n_tokens))
-                os.replace(tmp, path)
-            finally:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
+            self._write_retry(path, tmp, self._serialize(snapshot, n_tokens))
         except OSError:
             return
         self.disk_writes += 1
@@ -448,6 +506,102 @@ class PrefixCache:
             self._disk_skip.pop(key, None)  # a local write beats a stale
             self._disk_write(key, n_tokens, snapshot)  # negative probe
 
+    # -- decode-state checkpoints (replica failover) -----------------------
+    #
+    # A SEPARATE keyspace from the content-addressed prefix entries, on
+    # purpose: a decode-produced state at position n is numerically (not
+    # bitwise) the prefill-produced state at n, so letting a failover
+    # checkpoint serve as a prefix-cache hit would break the prefill
+    # bit-parity contract every existing test locks. Checkpoints are keyed
+    # by an opaque per-request tag, bounded by the number of live requests
+    # (the coordinator drops a tag at retirement), and stored as the
+    # codec's serialized bytes — mesh-independent, restorable on any
+    # surviving replica's plan.
+
+    def put_ckpt(self, tag: bytes, n_tokens: int, snapshot):
+        """Checkpoint one live request's decode state under `tag`.
+
+        Keeps the two deepest positions per tag: under an overlapped
+        engine the deepest checkpoint can run one tick ahead of the
+        host-observed token stream, making it momentarily unusable for
+        recovery — the penultimate one never is."""
+        if self._serialize is None:
+            raise RuntimeError("put_ckpt() needs bind_codec() first")
+        import numpy as np
+        snapshot = jax.tree_util.tree_map(np.asarray, snapshot)
+        data = self._serialize(snapshot, int(n_tokens))
+        ents = self._ckpts.setdefault(tag, [])
+        for i, (n, old) in enumerate(ents):
+            if n == int(n_tokens):
+                self.ckpt_bytes -= len(old)
+                ents.pop(i)
+                break
+        ents.append((int(n_tokens), data))
+        ents.sort()
+        while len(ents) > 2:
+            _, old = ents.pop(0)
+            self.ckpt_bytes -= len(old)
+        self.ckpt_bytes += len(data)
+        self.ckpt_puts += 1
+        if self._tracer:
+            self._tracer.instant("cache", "checkpoint",
+                                 n_tokens=int(n_tokens), nbytes=len(data))
+
+    def get_ckpt(self, tag: bytes, max_tokens: int | None = None):
+        """Deepest usable checkpoint for `tag` -> (snapshot, n_tokens) or
+        None. `max_tokens` caps the position (recovery can only use a
+        checkpoint at or behind the host-observed token stream). Corrupt
+        entries are dropped and counted, never raised — recovery falls
+        back to a shallower checkpoint or a cold replay."""
+        ents = self._ckpts.get(tag, [])
+        for n, data in reversed(ents):
+            if max_tokens is not None and n > max_tokens:
+                continue
+            try:
+                snapshot, n_tok = self._deserialize(data)
+            except Exception:
+                self.ckpt_corrupt += 1
+                ents.remove((n, data))
+                self.ckpt_bytes -= len(data)
+                continue
+            self.ckpt_hits += 1
+            return snapshot, int(n_tok)
+        self.ckpt_misses += 1
+        return None
+
+    def drop_ckpt(self, tag: bytes):
+        """Release a retired request's checkpoints."""
+        ents = self._ckpts.pop(tag, None)
+        if ents:
+            self.ckpt_bytes -= sum(len(d) for _, d in ents)
+            self.ckpt_drops += 1
+
+    def flush_ckpts_to_disk(self) -> list[str]:
+        """Persist every live checkpoint's deepest serialized form to the
+        disk tier (the SIGTERM drain path: a replacement process can pick
+        in-flight work back up). Returns the written paths; best-effort
+        like _disk_write."""
+        if self.save_dir is None or self._params_fp is None:
+            return []
+        d = os.path.join(self.save_dir, self._params_fp.hex()[:16])
+        paths = []
+        try:
+            os.makedirs(d, exist_ok=True)
+        except OSError:
+            return []
+        for tag, ents in self._ckpts.items():
+            if not ents:
+                continue
+            _, data = ents[-1]
+            path = os.path.join(d, f"ckpt-{tag.hex()[:32]}.npz")
+            tmp = f"{path}.{os.getpid()}.tmp"
+            try:
+                self._write_retry(path, tmp, data)
+            except OSError:
+                continue
+            paths.append(path)
+        return paths
+
     # -- accounting --------------------------------------------------------
 
     def __len__(self) -> int:
@@ -457,6 +611,9 @@ class PrefixCache:
         self.lookups = self.hits = self.misses = 0
         self.hit_tokens = self.inserts = self.evictions = 0
         self.disk_loads = self.disk_writes = 0
+        self.disk_corrupt = self.disk_retries = 0
+        self.ckpt_puts = self.ckpt_hits = self.ckpt_misses = 0
+        self.ckpt_drops = self.ckpt_corrupt = 0
 
     def stats(self) -> dict:
         return {
@@ -472,4 +629,15 @@ class PrefixCache:
             "seen_keys": len(self._seen),
             "disk_loads": self.disk_loads,
             "disk_writes": self.disk_writes,
+            "disk_corrupt": self.disk_corrupt,
+            "disk_retries": self.disk_retries,
+            "checkpoints": {
+                "tags": len(self._ckpts),
+                "bytes": self.ckpt_bytes,
+                "puts": self.ckpt_puts,
+                "hits": self.ckpt_hits,
+                "misses": self.ckpt_misses,
+                "drops": self.ckpt_drops,
+                "corrupt": self.ckpt_corrupt,
+            },
         }

@@ -112,6 +112,21 @@ def request_key(seed: int, row: int = 0) -> jax.Array:
     return jax.random.fold_in(jax.random.PRNGKey(seed), row)
 
 
+@jax.jit
+def advance_key(key: jax.Array, n: jax.Array) -> jax.Array:
+    """The request stream key after `n` emitted tokens.
+
+    `sample_step` advances a stream as `split(key)[0]` once per token, so
+    a recovered request that already emitted n tokens resumes its stream
+    at exactly `advance_key(request_key(seed), n)` — this is what makes
+    failover bit-identical to the fault-free run. `n` is traced (one
+    compiled trace for every replay length).
+    """
+    return jax.lax.fori_loop(
+        0, jnp.asarray(n, jnp.int32),
+        lambda _, k: jax.random.split(k)[0], key)
+
+
 # Filter candidate budget: top-k / top-p thresholds are computed over the
 # CANDIDATES largest logits (lax.top_k) instead of a full-vocab sort —
 # XLA's CPU sort is serial and costs milliseconds at LM vocab sizes, while

@@ -333,6 +333,10 @@ SPAN_NAMES = frozenset({
     "collective", "retire",
     # request lifecycle (track "slot<i>")
     "prefill", "decode",
+    # replica lifecycle (coordinator track "replica<i>"): "replica" spans
+    # the replica's whole life (left open — flushed unterminated — while
+    # it lives); "recover" wraps one request's failover re-install
+    "replica", "recover",
 })
 INSTANT_NAMES = frozenset({
     "submit",                       # track "queue": request enqueued
@@ -345,6 +349,11 @@ INSTANT_NAMES = frozenset({
     "retire", "drop",               # slot: request left its slot
     "recompile",                    # track "tick": mid-serve jit retrace
     "evict", "disk_load",           # track "cache": store internals
+    "disk_corrupt",                 # cache: quarantined unreadable file
+    "replica_dead",                 # replica<i>: declared dead (cause=)
+    "failover",                     # replica<i>: request re-homed here
+    "checkpoint",                   # replica<i>: decode state checkpointed
+    "shed",                         # track "queue": admission shed
 })
 COUNTER_NAMES = frozenset({"memory"})
 

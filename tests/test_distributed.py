@@ -180,6 +180,64 @@ def test_with_retries_unlisted_exception_propagates(monkeypatch):
     assert calls["n"] == 1 and sleeps == []
 
 
+def test_with_retries_preserves_wrapped_metadata():
+    from repro.distributed import fault
+
+    def load_shard(path):
+        """Read one data shard."""
+        return path
+
+    wrapped = fault.with_retries(load_shard)
+    assert wrapped.__name__ == "load_shard"
+    assert wrapped.__doc__ == "Read one data shard."
+
+
+def test_with_retries_jitter_stretches_backoff(monkeypatch):
+    from repro.distributed import fault
+
+    sleeps = []
+    monkeypatch.setattr(fault.time, "sleep", sleeps.append)
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise IOError("transient")
+        return "ok"
+
+    assert fault.with_retries(flaky, retries=3, backoff=0.5,
+                              jitter=0.5)() == "ok"
+    # each sleep is base * u with u uniform in [1, 1+jitter]
+    for base, got in zip([0.5, 1.0, 2.0], sleeps):
+        assert base <= got <= base * 1.5
+
+
+def test_with_retries_on_retry_hook(monkeypatch):
+    from repro.distributed import fault
+
+    monkeypatch.setattr(fault.time, "sleep", lambda _s: None)
+    seen = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError(f"boom {calls['n']}")
+        return "ok"
+
+    fault.with_retries(flaky, retries=3, backoff=0.1,
+                       on_retry=lambda a, e: seen.append((a, str(e))))()
+    assert seen == [(1, "boom 1"), (2, "boom 2")]  # 1-based attempt index
+
+
+def test_straggler_detector_stop_without_start_raises():
+    from repro.distributed import fault
+
+    det = fault.StragglerDetector()
+    with pytest.raises(RuntimeError):
+        det.stop()
+
+
 def test_straggler_detector_flags_outlier(monkeypatch):
     from repro.distributed import fault
 

@@ -449,3 +449,102 @@ def test_deep_snapshot_hit_survives_seen_key_eviction():
     pc._seen.clear()                           # simulate total seen eviction
     plan2 = pc.plan(np.concatenate([toks, [1, 2, 3]]))  # extends the prompt
     assert plan2.n_restore == 16 and plan2.snapshot is not None
+
+
+# ---------------------------------------------------------------------------
+# disk-tier robustness: quarantine + injected transient / persistent faults
+# ---------------------------------------------------------------------------
+
+def _persist_one(tmp_path, seed=12):
+    """Serve one cacheable prompt with a disk-backed cache; return the
+    pieces a fresh restarted cache needs to probe the persisted file."""
+    import os
+    model, cfg, params = _setup(seed=seed)
+    prompt = _tokens(cfg, 3 * BLK + 5, seed=seed * 10)
+    pc = PrefixCache(max_bytes=1 << 22, save_dir=str(tmp_path))
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                      prefix_cache=pc)
+    eng.submit(prompt, 3)
+    ref = eng.run()[0]
+    assert pc.stats()["disk_writes"] >= 1
+    files = [os.path.join(r, f) for r, _, fs in os.walk(tmp_path)
+             for f in fs if f.endswith(".npz")]
+    assert files
+    return model, cfg, params, prompt, ref, files
+
+
+def test_corrupt_snapshot_quarantined_with_counter(tmp_path):
+    """A truncated persisted snapshot degrades to a miss: the file is
+    renamed out of the store as `.bad` (never re-probed, never deleted —
+    an operator can post-mortem it), disk_corrupt increments, and the
+    request is still served correctly from a cold prefill."""
+    import os
+    model, cfg, params, prompt, ref, files = _persist_one(tmp_path)
+    for p in files:
+        with open(p, "r+b") as fh:   # truncate mid-payload, valid prefix
+            data = fh.read()
+            fh.seek(0)
+            fh.truncate()
+            fh.write(data[:len(data) // 2])
+    pc = PrefixCache(max_bytes=1 << 22, save_dir=str(tmp_path))
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                      prefix_cache=pc)
+    eng.submit(prompt, 3)
+    out = eng.run()[0]                        # must not raise
+    np.testing.assert_array_equal(out.tokens, ref.tokens)
+    st = pc.stats()
+    assert st["disk_loads"] == 0 and st["disk_corrupt"] >= 1
+    # only files the lookup walk actually probed are quarantined (renamed
+    # to `.bad` for post-mortem); the cold serve then re-persists fresh
+    # snapshots at the original paths
+    quarantined = [p for p in files if os.path.exists(p + ".bad")]
+    assert len(quarantined) == st["disk_corrupt"]
+    assert st["disk_writes"] >= 1
+
+
+def test_transient_io_fault_absorbed_by_retries(tmp_path):
+    """An io_fault hook raising OSError on the first read attempts is
+    absorbed by the retry wrapper: the disk load still succeeds and
+    disk_retries counts the absorbed faults."""
+    model, cfg, params, prompt, ref, _ = _persist_one(tmp_path, seed=13)
+    pc = PrefixCache(max_bytes=1 << 22, save_dir=str(tmp_path))
+    flakes = {"left": 2}                       # == retry budget
+
+    def fault(op):
+        if op == "read" and flakes["left"] > 0:
+            flakes["left"] -= 1
+            raise OSError("injected flake")
+    pc.io_fault = fault
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                      prefix_cache=pc)
+    eng.submit(prompt, 3)
+    np.testing.assert_array_equal(eng.run()[0].tokens, ref.tokens)
+    st = pc.stats()
+    assert st["disk_loads"] >= 1              # load went through
+    assert st["disk_retries"] >= 2            # both flakes absorbed
+    assert st["disk_corrupt"] == 0            # healthy file, flaky path
+
+
+def test_persistent_io_fault_degrades_to_miss(tmp_path):
+    """When every read attempt fails, the lookup degrades to a miss (cold
+    prefill, correct output) and the file is NOT quarantined — the bytes
+    may be fine, the path to them is not."""
+    import os
+    model, cfg, params, prompt, ref, files = _persist_one(tmp_path, seed=14)
+    pc = PrefixCache(max_bytes=1 << 22, save_dir=str(tmp_path))
+
+    def always_fail(op):
+        if op == "read":
+            raise OSError("store down")
+    pc.io_fault = always_fail
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=128,
+                      prefix_cache=pc)
+    eng.submit(prompt, 3)
+    np.testing.assert_array_equal(eng.run()[0].tokens, ref.tokens)
+    st = pc.stats()
+    assert st["disk_loads"] == 0 and st["disk_corrupt"] == 0
+    assert all(os.path.exists(p) for p in files)  # no quarantine
+    # writes are best-effort too: a down store must not abort serving
+    pc.io_fault = lambda op: (_ for _ in ()).throw(OSError("down"))
+    eng.submit(_tokens(cfg, 3 * BLK + 5, seed=999), 3)
+    eng.run()                                  # swallowed, no raise

@@ -303,3 +303,49 @@ def test_stats_shapes_and_scheduler_counters():
     eng.reset_stats()
     st2 = eng.stats()
     assert st2["scheduler"]["started"] == 0 and st2["itl_ms"]["p50"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# mid-prefill cancellation (shelving): drop a half-prefilled request, then
+# resubmit it — output must be bit-identical to an uninterrupted run
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_prefill_then_resubmit_bit_identical():
+    model, cfg, params = _setup("polysketch")
+    blk = cfg.lt_block_size
+    long_p, short_p = _prompts(cfg, [8 * blk, 5], seed=21)
+    steps = 6
+    ref_long, ref_short = _refs(model, cfg, params, [long_p, short_p], steps)
+
+    eng = ServeEngine(model, cfg, params, slots=2, max_len=256,
+                      overlap=True, prefill_budget=blk)
+    rid_long = eng.submit(long_p, steps)
+    rid_short = eng.submit(short_p, steps)
+    eng.step()                      # admits both; long is mid-prefill
+    assert eng._slots[0].prefilling  # 8 blocks vs a 1-block budget
+    dropped = eng.cancel(rid_long)
+    assert dropped is not None and dropped.rid == rid_long
+    outs = {o.rid: o for o in eng.run()}
+    assert set(outs) == {rid_short}  # the canceled request never emits
+    np.testing.assert_array_equal(outs[rid_short].tokens, ref_short)
+
+    # resubmit into the same engine: the shelved request's slot and any
+    # in-flight chunk work are gone, so this is a fresh admission and must
+    # match the never-canceled reference bit-for-bit
+    rid2 = eng.submit(long_p, steps)
+    outs2 = {o.rid: o for o in eng.run()}
+    np.testing.assert_array_equal(outs2[rid2].tokens, ref_long)
+
+
+def test_cancel_queued_and_unknown_rids():
+    model, cfg, params = _setup("polysketch")
+    prompts = _prompts(cfg, [5, 7, 9], seed=22)
+    eng = ServeEngine(model, cfg, params, slots=1, max_len=64)
+    rids = [eng.submit(p, 3) for p in prompts]
+    # slots=1: rids[1:] sit in the queue; cancel one before any admission
+    assert eng.cancel(rids[2]).rid == rids[2]
+    assert eng.cancel(12345) is None           # unknown rid: no-op
+    outs = {o.rid for o in eng.run()}
+    assert outs == {rids[0], rids[1]}
+    # a retired request is not cancellable either
+    assert eng.cancel(rids[0]) is None
